@@ -1,0 +1,55 @@
+"""Fig 1 / Fig 2 — end-to-end latency of cold-start *bursts*.
+
+A single function receives B concurrent invocations against an idle cluster;
+we report the p50 E2E latency over the burst, plus the breakdown into
+cluster-manager time vs sandbox creation vs init/probe time. Paper: Knative's
+cluster-manager component grows to ~2 s at a 100-sandbox burst while the
+worker-side times stay flat; Dirigent stays near-flat.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    SWEEP_SCALING, latency_stats, make_dirigent, make_knative,
+    preload_functions,
+)
+from repro.simcore import Environment
+
+
+def burst(system_kind: str, size: int, seed: int = 31):
+    env = Environment(seed=seed)
+    if system_kind.startswith("dirigent"):
+        runtime = "containerd" if "ctd" in system_kind else "firecracker"
+        sys_ = make_dirigent(env, runtime=runtime)
+    else:
+        sys_ = make_knative(env)
+    preload_functions(sys_, ["burst"], dict(stable_window=60.0,
+                                            scale_to_zero_grace=30.0,
+                                            cpu_req_millis=100, mem_req_mb=128))
+    invs = [sys_.invoke("burst", exec_time=0.1) for _ in range(size)]
+    env.run(until=600.0)
+    st = latency_stats(invs, "e2e_latency")
+    sched = latency_stats(invs, "scheduling_latency")
+    st["sched_p50"] = sched["p50"]
+    return st
+
+
+def run(reporter, quick: bool = True) -> dict:
+    out = {}
+    sizes = [1, 10, 100] if quick else [1, 10, 25, 50, 100, 200]
+    for kind in ["dirigent-fc", "dirigent-ctd", "knative"]:
+        for b in sizes:
+            st = burst(kind, b)
+            reporter.add(f"fig1/{kind}/burst={b}", st["p50"] * 1e6,
+                         f"sched_p50_ms={st['sched_p50']*1e3:.1f};"
+                         f"p99_ms={st['p99']*1e3:.1f}")
+            out[f"{kind}_{b}"] = st
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvReporter
+    rep = CsvReporter()
+    rep.header()
+    run(rep, quick=True)

@@ -1,0 +1,106 @@
+"""Fig 7 — cold-start performance: p50/p99 E2E latency vs creation rate.
+
+Systems: Dirigent+Firecracker (peak ≈2500/s, C1), Dirigent+containerd
+(≈1750/s kernel-lock-bound, C2), Dirigent persist-all ablation (≈1000/s, C3),
+Knative (saturates ≈2/s), Knative-on-K3s fused ablation (marginal gain, C4),
+OpenWhisk flavor. Each invocation hits a distinct single-shot function so
+every invocation is a cold start (InVitro cold-start methodology).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (
+    SWEEP_SCALING, latency_stats, make_dirigent, make_knative,
+    preload_functions, run_open_loop,
+)
+from repro.core import CostModel
+from repro.simcore import Environment
+
+EXEC_TIME = 0.1
+
+
+def _plan(rate: float, duration: float) -> List[tuple]:
+    n = int(rate * duration)
+    return [(i / rate, f"f{i}", EXEC_TIME) for i in range(n)]
+
+
+def cold_sweep_dirigent(rate: float, duration: float = 5.0,
+                        runtime: str = "firecracker",
+                        persist_sandbox_state: bool = False,
+                        n_workers: int = 93, seed: int = 11):
+    env = Environment(seed=seed)
+    cl = make_dirigent(env, n_workers=n_workers, runtime=runtime,
+                       persist_sandbox_state=persist_sandbox_state)
+    plan = _plan(rate, duration)
+    preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
+    invs = run_open_loop(env, cl, plan, until_extra=90.0)
+    return latency_stats(invs, "e2e_latency")
+
+
+def cold_sweep_knative(rate: float, duration: float = 20.0,
+                       fused: bool = False, flavor: str = "knative",
+                       n_workers: int = 93, seed: int = 12):
+    env = Environment(seed=seed)
+    kn = make_knative(env, n_workers=n_workers, fused=fused, flavor=flavor)
+    plan = _plan(rate, duration)
+    preload_functions(kn, [p[1] for p in plan], SWEEP_SCALING)
+    invs = run_open_loop(env, kn, plan, until_extra=240.0)
+    return latency_stats(invs, "e2e_latency")
+
+
+def find_peak(sweep_fn, rates, p99_limit: float = 1.0) -> float:
+    """Peak sustainable rate: largest rate whose p99 E2E stays under limit."""
+    peak = 0.0
+    for r in rates:
+        st = sweep_fn(r)
+        if st["done"] >= 0.97 * st["total"] and st["p99"] <= p99_limit:
+            peak = r
+        else:
+            break
+    return peak
+
+
+def run(reporter, quick: bool = True) -> dict:
+    out = {}
+    rates_fc = [100, 1000, 2000, 2500] if quick else [1, 10, 100, 500, 1000,
+                                                      1500, 2000, 2500, 3000]
+    for r in rates_fc:
+        st = cold_sweep_dirigent(r, runtime="firecracker")
+        reporter.add(f"fig7/dirigent-fc/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+        out[f"fc_{r}"] = st
+    for r in ([1000, 1750, 2000] if quick else [100, 500, 1000, 1500, 1750, 2000]):
+        st = cold_sweep_dirigent(r, runtime="containerd")
+        reporter.add(f"fig7/dirigent-containerd/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+        out[f"ctd_{r}"] = st
+    for r in ([500, 1000, 1500] if quick else [100, 500, 750, 1000, 1250, 1500]):
+        st = cold_sweep_dirigent(r, runtime="firecracker",
+                                 persist_sandbox_state=True)
+        reporter.add(f"fig7/dirigent-persist-all/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+        out[f"persist_{r}"] = st
+    for r in ([1, 2, 3] if quick else [0.5, 1, 2, 3, 4]):
+        st = cold_sweep_knative(r)
+        reporter.add(f"fig7/knative/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+        out[f"kn_{r}"] = st
+        st = cold_sweep_knative(r, fused=True)
+        reporter.add(f"fig7/knative-k3s-fused/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+        out[f"k3s_{r}"] = st
+    for r in [1, 2]:
+        st = cold_sweep_knative(r, flavor="openwhisk")
+        reporter.add(f"fig7/openwhisk/rate={r}", st["p50"] * 1e6,
+                     f"p99_ms={st['p99']*1e3:.1f};done={st['done']}/{st['total']}")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvReporter
+    rep = CsvReporter()
+    rep.header()
+    run(rep, quick=True)

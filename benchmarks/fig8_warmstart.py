@@ -1,0 +1,110 @@
+"""Fig 8 — warm-start performance: p50/p99 E2E latency vs request rate.
+
+One pre-scaled function; every invocation finds a warm sandbox, so only the
+data plane is exercised. Paper targets (C5): Dirigent sustains 4000/s at
+p50 1.4 ms / p99 2.5 ms (port exhaustion beyond); Knative peaks ≈1200/s at
+p50 7 ms (activator CPU); OpenWhisk adds Kafka+CouchDB latency.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    latency_stats, make_dirigent, make_knative, preload_functions,
+    run_open_loop,
+)
+from repro.core.abstractions import Sandbox, SandboxState
+from repro.simcore import Environment
+
+EXEC_TIME = 0.3e-3   # hello-world
+N_FUNCTIONS = 30   # spread across DP replicas by function-hash steering
+
+
+def _prescale_dirigent(cl, fn: str, n_sandboxes: int) -> None:
+    """Install ready sandboxes directly (the measured path is warm routing)."""
+    leader = cl.control_plane_leader()
+    st = leader.functions[fn]
+    wids = list(cl.workers.keys())
+    base = abs(hash(fn)) % 10_000_000
+    for i in range(n_sandboxes):
+        wid = wids[(base + i) % len(wids)]
+        sb = Sandbox(sandbox_id=100000 + base + i, function_name=fn,
+                     ip=(10, 0, 0, 1), port=80, worker_id=wid,
+                     state=SandboxState.READY)
+        st.sandboxes[sb.sandbox_id] = sb
+        cl.workers[wid].sandboxes[sb.sandbox_id] = __import__(
+            "repro.core.worker", fromlist=["SandboxRuntime"]).SandboxRuntime(
+                sandbox=sb, ready=True)
+        for dp in cl.data_planes:
+            dp.add_endpoint(fn, sb)
+    # freeze autoscaling decisions during the measurement
+    st.autoscaler.no_downscale_until = 1e18
+
+
+def _prescale_knative(kn, fn: str, n_sandboxes: int) -> None:
+    from repro.core.baseline_knative import PodEndpoint
+    st = kn.functions[fn]
+    wids = list(kn.workers.keys())
+    base = abs(hash(fn)) % 10_000_000
+    for i in range(n_sandboxes):
+        sb = Sandbox(sandbox_id=100000 + base + i, function_name=fn,
+                     ip=(10, 0, 0, 1), port=80,
+                     worker_id=wids[(base + i) % len(wids)],
+                     state=SandboxState.READY)
+        st.endpoints[sb.sandbox_id] = PodEndpoint(sandbox=sb)
+    st.autoscaler.no_downscale_until = 1e18
+
+
+def warm_sweep(system_kind: str, rate: float, duration: float = 8.0,
+               seed: int = 21):
+    # port-pool exhaustion (the paper's 4000/s ceiling) only manifests once
+    # rate x duration exceeds the per-DP pool: stretch high-rate sweeps
+    if rate > 3500:
+        duration = max(duration, 30.0)
+    env = Environment(seed=seed)
+    names = [f"hot{i}" for i in range(N_FUNCTIONS)]
+    n_sb = max(4, int(rate * 0.02 / N_FUNCTIONS))  # slots per function
+    n = int(rate * duration)
+    plan = [(i / rate, names[i % N_FUNCTIONS], EXEC_TIME) for i in range(n)]
+    scaling = dict(stable_window=600.0, scale_to_zero_grace=600.0)
+    if system_kind == "dirigent":
+        cl = make_dirigent(env)
+        preload_functions(cl, names, scaling)
+        for nm in names:
+            _prescale_dirigent(cl, nm, n_sb)
+        invs = run_open_loop(env, cl, plan, until_extra=30.0)
+    else:
+        kn = make_knative(env, flavor=("openwhisk" if system_kind == "openwhisk"
+                                       else "knative"))
+        preload_functions(kn, names, scaling)
+        for nm in names:
+            _prescale_knative(kn, nm, n_sb)
+        invs = run_open_loop(env, kn, plan, until_extra=30.0)
+    return latency_stats(invs, "e2e_latency")
+
+
+def run(reporter, quick: bool = True) -> dict:
+    out = {}
+    rates_d = [1000, 4000, 4600] if quick else [500, 1000, 2000, 3000, 4000,
+                                                4500, 5000]
+    for r in rates_d:
+        st = warm_sweep("dirigent", r)
+        reporter.add(f"fig8/dirigent/rate={r}", st["p50"] * 1e6,
+                     f"p99_us={st['p99']*1e6:.0f};done={st['done']}/{st['total']}")
+        out[f"d_{r}"] = st
+    for r in ([800, 1200, 1600] if quick else [400, 800, 1200, 1400, 1600]):
+        st = warm_sweep("knative", r)
+        reporter.add(f"fig8/knative/rate={r}", st["p50"] * 1e6,
+                     f"p99_us={st['p99']*1e6:.0f};done={st['done']}/{st['total']}")
+        out[f"kn_{r}"] = st
+    st = warm_sweep("openwhisk", 500)
+    reporter.add("fig8/openwhisk/rate=500", st["p50"] * 1e6,
+                 f"p99_us={st['p99']*1e6:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvReporter
+    rep = CsvReporter()
+    rep.header()
+    run(rep, quick=True)

@@ -1,0 +1,129 @@
+"""Fig 9 + Fig 10 — end-to-end performance on the Azure production workload.
+
+Runs the (synthesized) Azure 500-function / 30-minute trace on Dirigent and
+on the Knative baseline, with a 10-minute warm-up discarded, and reports:
+
+  * per-function geomean slowdown CDF stats (Fig 9; paper C7: median 1.38 for
+    Dirigent vs 13.2 for Knative; Dirigent ~713 sandboxes vs Knative ~2930);
+  * per-invocation and per-function scheduling-latency stats (Fig 10; paper
+    C6: Dirigent p50 1.74 ms / p99 1.13 s; Knative p50 4.67 ms / p99 59.6 s).
+
+The larger 4K-function trace (paper §5.3 "Larger trace") runs on Dirigent
+only — Knative cannot sustain it, which is itself one of the paper's claims.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.azure_trace import generate_azure_like_trace
+from benchmarks.common import make_dirigent, make_knative, preload_functions
+from repro.core import percentile, geomean
+from repro.simcore import Environment
+
+WARMUP = 600.0
+
+
+def _run_trace(system_kind: str, trace, n_workers: int = 93, seed: int = 41,
+               extra: float = 120.0):
+    env = Environment(seed=seed)
+    if system_kind == "dirigent":
+        sys_ = make_dirigent(env, n_workers=n_workers)
+    else:
+        sys_ = make_knative(env, n_workers=n_workers)
+    preload_functions(sys_, [f.name for f in trace.functions])
+    invs = []
+
+    def driver(env):
+        t_prev = 0.0
+        for t, fn, et in trace.invocations:
+            if t > t_prev:
+                yield env.timeout(t - t_prev)
+                t_prev = t
+            invs.append(sys_.invoke(fn, exec_time=et))
+
+    env.process(driver(env), name="trace-driver")
+    env.run(until=trace.duration + extra)
+    return sys_, invs
+
+
+def analyze(invs, warmup: float = WARMUP):
+    ok = [i for i in invs if i.t_done > 0 and not i.failed and i.arrival >= warmup]
+    nfail = sum(1 for i in invs if i.failed and i.arrival >= warmup)
+    sched = np.array([i.scheduling_latency for i in ok])
+    slow = np.array([i.slowdown for i in ok])
+    per_fn_sched, per_fn_slow = {}, {}
+    for i in ok:
+        per_fn_sched.setdefault(i.function_name, []).append(i.scheduling_latency)
+        per_fn_slow.setdefault(i.function_name, []).append(i.slowdown)
+    pf_sched = [float(np.mean(v)) for v in per_fn_sched.values()]
+    pf_slow = [geomean(v) for v in per_fn_slow.values()]
+    return {
+        "n": len(ok), "n_failed": nfail,
+        "sched_p50_ms": percentile(sched, 50) * 1e3,
+        "sched_p99_ms": percentile(sched, 99) * 1e3,
+        "perfn_sched_p50_ms": percentile(pf_sched, 50) * 1e3,
+        "perfn_sched_p99_ms": percentile(pf_sched, 99) * 1e3,
+        "perfn_slowdown_p50": percentile(pf_slow, 50),
+        "perfn_slowdown_p99": percentile(pf_slow, 99),
+    }
+
+
+def run(reporter, quick: bool = True) -> dict:
+    out = {}
+    if quick:
+        trace = generate_azure_like_trace(n_functions=500, duration=900.0,
+                                          target_invocations=84_000)
+        warmup = 300.0
+    else:
+        trace = generate_azure_like_trace()
+        warmup = WARMUP
+    for kind in ["dirigent", "knative"]:
+        sys_, invs = _run_trace(kind, trace)
+        a = analyze(invs, warmup)
+        # Fig 3 analogue: sandbox-creation rate over the trace (10 s buckets)
+        ts = [t for t, k, _ in sys_.collector.events if k == "sandbox-created"]
+        if ts:
+            import collections
+            buckets = collections.Counter(int(t // 10) for t in ts)
+            rates = [v / 10.0 for v in buckets.values()]
+            reporter.add(f"fig3/{kind}/creation-rate-mean",
+                         float(np.mean(rates)) * 1e6,
+                         f"p99_per_s={np.percentile(rates, 99):.1f};"
+                         f"max_per_s={max(rates):.1f};total={len(ts)}")
+        reporter.add(f"fig10/{kind}/azure500-sched-p50",
+                     a["sched_p50_ms"] * 1e3,
+                     f"p99_ms={a['sched_p99_ms']:.1f};"
+                     f"perfn_p99_ms={a['perfn_sched_p99_ms']:.1f};n={a['n']}")
+        reporter.add(f"fig9/{kind}/azure500-slowdown-p50",
+                     a["perfn_slowdown_p50"] * 1e6,
+                     f"perfn_slowdown_p99={a['perfn_slowdown_p99']:.1f};"
+                     f"sandboxes={sys_.collector.sandbox_creations}")
+        out[kind] = a
+        out[f"{kind}_sandboxes"] = sys_.collector.sandbox_creations
+
+    # larger trace (Dirigent only, scaled to quick mode)
+    if quick:
+        big = generate_azure_like_trace(n_functions=1000, duration=600.0,
+                                        target_invocations=150_000, seed=43)
+        bwarm = 200.0
+    else:
+        big = generate_azure_like_trace(n_functions=4000, duration=1800.0,
+                                        target_invocations=1_500_000, seed=43)
+        bwarm = WARMUP
+    sys_, invs = _run_trace("dirigent", big)
+    a = analyze(invs, bwarm)
+    reporter.add("fig9/dirigent/azure-large-slowdown-p50",
+                 a["perfn_slowdown_p50"] * 1e6,
+                 f"p99={a['perfn_slowdown_p99']:.1f};n={a['n']};"
+                 f"failed={a['n_failed']}")
+    out["large"] = a
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvReporter
+    rep = CsvReporter()
+    rep.header()
+    out = run(rep, quick=True)
+    for k, v in out.items():
+        print(k, v)

@@ -1,0 +1,52 @@
+"""§5.2.3 — cold-start throughput vs worker-node count.
+
+Methodology follows the paper exactly: worker daemons model sandbox creation
+as the p50 Firecracker snapshot-restore time (40 ms), heartbeat to the CP,
+and we sweep the cluster size. Paper (C9): latency/throughput match the
+93-node results up to 2500 workers; at 5000 workers peak degrades to
+~2000/s due to contention on the shared health-monitoring structures.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    SWEEP_SCALING, latency_stats, make_dirigent, preload_functions,
+    run_open_loop,
+)
+from repro.simcore import Environment
+
+
+def scalability_point(n_workers: int, rate: float, duration: float = 4.0,
+                      seed: int = 71):
+    env = Environment(seed=seed)
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker")
+    plan = [(i / rate, f"f{i}", 0.05) for i in range(int(rate * duration))]
+    preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
+    invs = run_open_loop(env, cl, plan, until_extra=60.0)
+    return latency_stats(invs, "e2e_latency")
+
+
+def run(reporter, quick: bool = True) -> dict:
+    out = {}
+    worker_counts = [93, 1000, 2500, 5000] if quick else [93, 500, 1000,
+                                                          2500, 5000]
+    rates = [2000, 2500] if quick else [1500, 2000, 2250, 2500, 2750]
+    for nw in worker_counts:
+        peak = 0
+        for r in rates:
+            st = scalability_point(nw, r)
+            ok = st["done"] >= 0.97 * st["total"] and st["p99"] <= 1.0
+            reporter.add(f"scalability/workers={nw}/rate={r}",
+                         st["p50"] * 1e6,
+                         f"p99_ms={st['p99']*1e3:.1f};ok={ok}")
+            if ok:
+                peak = r
+        out[nw] = peak
+        reporter.add(f"scalability/workers={nw}/peak", peak, "creations_per_s")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvReporter
+    rep = CsvReporter()
+    rep.header()
+    print(run(rep, quick=True))

@@ -1,0 +1,85 @@
+"""End-to-end serving driver: a real JAX LM served through Dirigent.
+
+This is the paper's serving path with real compute in the sandboxes:
+  * each Dirigent *sandbox* hosts a ``Replica`` of a (reduced) smollm-360m
+    running real jitted decode steps on this machine;
+  * invocations carry prompts as payloads; the worker executes them and the
+    measured wall time is billed to the virtual clock (live mode);
+  * cold starts = replica instantiation; the autoscaler scales replicas with
+    load, exactly as in the simulation benchmarks;
+  * finally, the ContinuousBatcher is driven directly to show slot-level
+    batched decoding (the per-sandbox concurrency throttle).
+
+Run:  PYTHONPATH=src python examples/serve_llm.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import Cluster, Function, ScalingConfig
+from repro.serving.engine import ContinuousBatcher, Replica
+from repro.simcore import Environment
+
+
+def main() -> None:
+    cfg = get_config("smollm-360m").reduced(
+        n_layers=4, d_model=128, n_heads=4, d_ff=256, vocab=1024)
+    print(f"model: smollm-360m (reduced) — "
+          f"{sum(x.size for x in jax.tree.leaves(Replica(cfg, max_seq=96).params)):,} params")
+
+    replicas = {}
+
+    def create_replica(sandbox):
+        # the live-mode "sandbox boot": instantiate + warm up the replica
+        rep = Replica(cfg, max_seq=96)
+        rep.generate([1, 2], max_new_tokens=1)     # trigger compilation
+        replicas[sandbox.sandbox_id] = rep
+
+    env = Environment(seed=7)
+    cluster = Cluster(env, n_workers=4, runtime="firecracker",
+                      create_hook=create_replica, sandbox_concurrency=1)
+    cluster.start()
+    cluster.register_sync(Function(
+        name="llm", image_url="registry://smollm:reduced", port=9000,
+        scaling=ScalingConfig(target_concurrency=1)))
+
+    prompts = [[1, 5, 9], [2, 6], [3, 7, 11, 13], [4, 8, 12], [1, 2, 3],
+               [9, 9, 9], [5], [6, 10]]
+    t_wall = time.perf_counter()
+    invs = []
+    for i, p in enumerate(prompts):
+        def payload(p=p, i=i):
+            rep = next(iter(replicas.values()))
+            return rep.generate(p, max_new_tokens=8, seed=i)
+        invs.append(cluster.invoke("llm", exec_time=0.05, payload=payload))
+        env.run(until=env.now + 0.3)
+    env.run(until=env.now + 30.0)
+    wall = time.perf_counter() - t_wall
+
+    print(f"\nserved {sum(1 for i in invs if not i.failed)}/{len(invs)} "
+          f"requests through the Dirigent data plane "
+          f"({cluster.collector.sandbox_creations} replicas cold-started); "
+          f"wall {wall:.1f}s")
+    for i, inv in enumerate(invs[:4]):
+        print(f"  req{i}: tokens={inv.result} "
+              f"e2e(virtual)={inv.e2e_latency * 1e3:.0f} ms cold={inv.cold}")
+
+    # -- continuous batching inside one replica ------------------------------
+    rep = next(iter(replicas.values()))
+    cb = ContinuousBatcher(rep, max_slots=4)
+    rids = [cb.add_request(p, max_new=8) for p in prompts[:4]]
+    t0 = time.perf_counter()
+    cb.run_until_done()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(v) for v in cb.finished.values())
+    print(f"\ncontinuous batcher: {len(rids)} requests, {tokens} tokens in "
+          f"{cb.steps} lockstep decode steps ({tokens / dt:.0f} tok/s wall)")
+    # consistency with single-request generation:
+    single = rep.generate(prompts[0], max_new_tokens=8)
+    assert cb.finished[rids[0]] == single, "batched != single-request output"
+    print("batched output == single-request output (exactness check passed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Concurrency-based autoscaling policy (Knative KPA defaults).
+
+The paper (§4) states Dirigent implements and uses *Knative's default*
+scheduling policies so the comparison is apples-to-apples; both our Dirigent
+model and the Knative baseline share this exact implementation.
+
+Algorithm (KPA): desired = ceil(avg_concurrency / target). Two sliding
+windows — a 60 s *stable* window and a 6 s *panic* window. If the panic
+desired count is >= 2x the current ready count, the autoscaler enters panic
+mode and never scales down while panicking. Scale-to-zero happens only after
+the stable window average is zero for the scale-to-zero grace period.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Tuple
+
+from repro.core.abstractions import ScalingConfig
+
+
+@dataclass
+class ConcurrencyWindow:
+    """Time-bucketed average of a concurrency signal."""
+
+    horizon: float
+    samples: Deque[Tuple[float, float]] = field(default_factory=deque)
+
+    def record(self, t: float, value: float) -> None:
+        self.samples.append((t, value))
+        self._evict(t)
+
+    def _evict(self, t: float) -> None:
+        while self.samples and self.samples[0][0] < t - self.horizon:
+            self.samples.popleft()
+
+    def average(self, t: float) -> float:
+        self._evict(t)
+        if not self.samples:
+            return 0.0
+        return sum(v for _, v in self.samples) / len(self.samples)
+
+    def max(self, t: float) -> float:
+        self._evict(t)
+        if not self.samples:
+            return 0.0
+        return max(v for _, v in self.samples)
+
+
+class FunctionAutoscalerState:
+    """Per-function autoscaler state machine."""
+
+    def __init__(self, scaling: ScalingConfig):
+        self.scaling = scaling
+        self.stable = ConcurrencyWindow(scaling.stable_window)
+        self.panic = ConcurrencyWindow(scaling.panic_window)
+        self.in_panic_since: float | None = None
+        self.max_panic_desired = 0
+        self.zero_since: float | None = None
+        self.no_downscale_until: float = 0.0  # recovery hold (paper §3.4.1)
+
+    def record_metric(self, t: float, concurrency: float) -> None:
+        self.stable.record(t, concurrency)
+        self.panic.record(t, concurrency)
+
+    def desired(self, t: float, ready: int) -> int:
+        s = self.scaling
+        stable_avg = self.stable.average(t)
+        panic_avg = self.panic.average(t)
+        desired_stable = math.ceil(stable_avg / s.target_concurrency)
+        desired_panic = math.ceil(panic_avg / s.target_concurrency)
+
+        # Panic entry: short-window demand at least 2x what we have ready.
+        if desired_panic >= s.panic_threshold * max(ready, 1) and desired_panic > 0:
+            self.in_panic_since = t
+            self.max_panic_desired = max(self.max_panic_desired, desired_panic)
+        # Panic exit after a full stable window without re-triggering.
+        if self.in_panic_since is not None and t - self.in_panic_since > s.stable_window:
+            self.in_panic_since = None
+            self.max_panic_desired = 0
+
+        if self.in_panic_since is not None:
+            d = max(desired_panic, self.max_panic_desired, ready)
+        else:
+            d = desired_stable
+
+        d = min(d, s.max_scale)
+
+        # Scale-to-zero only after the grace period of zero load.
+        if d == 0:
+            if self.zero_since is None:
+                self.zero_since = t
+            if t - self.zero_since < s.scale_to_zero_grace:
+                d = min(ready, 1) if ready > 0 else 0
+        else:
+            self.zero_since = None
+
+        # Post-recovery hold: never downscale before no_downscale_until.
+        if t < self.no_downscale_until:
+            d = max(d, ready)
+        return d

@@ -1,0 +1,271 @@
+"""Dirigent cluster wiring: CP replicas + DP replicas + workers + front-end LB.
+
+``Cluster`` is the top-level façade used by benchmarks, tests and examples:
+
+    cluster = Cluster(env, n_workers=93, runtime="firecracker")
+    cluster.start()
+    env.run_until_event(cluster.register(Function(...)))
+    cluster.invoke("fn", exec_time=0.01)
+    env.run(until=300)
+    cluster.collector.summary()
+
+Failure injection: ``fail_control_plane_leader()``, ``fail_data_plane(i)``,
+``fail_worker_daemon(wid)``, ``fail_worker_node(wid)`` — each with the
+corresponding recovery path from paper §3.4.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, Generator, List, Optional
+
+from repro.core.abstractions import DataPlaneInfo, Function, WorkerNodeInfo
+from repro.core.control_plane import ControlPlane
+from repro.core.costmodel import CostModel, DEFAULT_COSTS
+from repro.core.data_plane import DataPlane
+from repro.core.leader_election import LeaderElector
+from repro.core.metrics import Collector
+from repro.core.persistence import SimStore
+from repro.core.request import Invocation, InvocationMode
+from repro.core.worker import WorkerDaemon
+from repro.simcore import Environment, Event
+
+
+class Cluster:
+    def __init__(self, env: Environment, n_workers: int = 93,
+                 n_data_planes: int = 3, n_control_planes: int = 3,
+                 runtime: str = "firecracker",
+                 costs: Optional[CostModel] = None,
+                 persist_sandbox_state: bool = False,
+                 enable_ha_sim: bool = False,
+                 sandbox_concurrency: int = 1,
+                 hedge_after: Optional[float] = None,
+                 lb_policy: str = "least_loaded",
+                 placement_policy: str = "balanced",
+                 create_hook: Optional[Callable] = None):
+        self.env = env
+        self.costs = (costs or DEFAULT_COSTS).dirigent
+        self.collector = Collector()
+        self.store = SimStore(
+            env, fsync_latency=self.costs.persist_write,
+            replication_latency=self.costs.persist_replication,
+            read_latency=self.costs.persist_read,
+            n_replicas=n_control_planes,
+            fsync_sigma=self.costs.persist_write_sigma,
+            stall_prob=self.costs.persist_stall_prob,
+            stall=self.costs.persist_stall)
+        self.control_planes: List[ControlPlane] = [
+            ControlPlane(env, i, self.costs, self, self.store, self.collector,
+                         persist_sandbox_state=persist_sandbox_state,
+                         placement_policy=placement_policy)
+            for i in range(n_control_planes)
+        ]
+        self.data_planes: List[DataPlane] = [
+            DataPlane(env, i, self.costs, self, self.collector,
+                      concurrency=sandbox_concurrency,
+                      hedge_after=hedge_after, lb_policy=lb_policy)
+            for i in range(n_data_planes)
+        ]
+        self.workers: Dict[int, WorkerDaemon] = {}
+        for wid in range(n_workers):
+            info = WorkerNodeInfo(
+                worker_id=wid, name=f"w{wid}",
+                ip=(10, 0, wid // 250, wid % 250), port=9000)
+            self.workers[wid] = WorkerDaemon(env, info, self.costs,
+                                             runtime=runtime,
+                                             create_hook=create_hook)
+        self.elector = LeaderElector(env, self, self.costs,
+                                     enable_hb_sim=enable_ha_sim)
+        self.enable_ha_sim = enable_ha_sim
+        self._inv_ids = itertools.count(1)
+        self._worker_hb_procs = {}
+        self._started = False
+        # front-end LB rotation: dead DPs keep receiving traffic until the
+        # keepalived health check removes them (paper §5.4 DP failover)
+        self._lb_backends = [dp.dp_id for dp in self.data_planes]
+
+    # -- topology ------------------------------------------------------------------
+    def control_planes_alive(self) -> List[ControlPlane]:
+        return [cp for cp in self.control_planes if cp.alive]
+
+    def control_plane_by_id(self, cp_id: Optional[int]) -> Optional[ControlPlane]:
+        if cp_id is None:
+            return None
+        cp = self.control_planes[cp_id]
+        return cp if cp.alive else None
+
+    def control_plane_leader(self) -> Optional[ControlPlane]:
+        return self.control_plane_by_id(self.elector.leader_id)
+
+    def data_planes_alive(self) -> List[DataPlane]:
+        return [dp for dp in self.data_planes if dp.alive]
+
+    def worker_by_id(self, wid: int) -> Optional[WorkerDaemon]:
+        return self.workers.get(wid)
+
+    # -- startup ------------------------------------------------------------------
+    def start(self) -> None:
+        """Elect a leader, register components, start heartbeats."""
+        assert not self._started
+        self._started = True
+        self.elector.bootstrap()
+        leader = self.control_plane_leader()
+        done = self.env.event()
+
+        def boot(env):
+            for dp in self.data_planes:
+                info = DataPlaneInfo(dp_id=dp.dp_id,
+                                     ip=(10, 1, 0, dp.dp_id), port=8080)
+                yield from leader.register_data_plane(info)
+            for wid, w in self.workers.items():
+                yield from leader.register_worker(w.info)
+            done.succeed(None)
+
+        self.env.process(boot(self.env), name="cluster-boot")
+        self.env.run_until_event(done)
+        for wid in self.workers:
+            self._worker_hb_procs[wid] = self.env.process(
+                self._worker_heartbeat(wid), name=f"hb-{wid}")
+
+    def _worker_heartbeat(self, wid: int) -> Generator:
+        c = self.costs
+        rng = self.env.rng(f"hb-{wid}")
+        yield self.env.timeout(rng.uniform(0, c.worker_heartbeat_period))
+        while True:
+            yield self.env.timeout(c.worker_heartbeat_period)
+            w = self.workers.get(wid)
+            if w is None or not w.daemon_alive:
+                continue
+            cp = self.control_plane_leader()
+            if cp is not None:
+                cp.heartbeat(wid)
+
+    # -- user API -------------------------------------------------------------------
+    def register(self, fn: Function) -> Event:
+        """Returns an event that fires when registration completes."""
+        leader = self.control_plane_leader()
+        done = self.env.event()
+
+        def reg(env):
+            yield from leader.register_function(fn)
+            done.succeed(fn.name)
+
+        self.env.process(reg(self.env), name=f"register-{fn.name}")
+        return done
+
+    def register_sync(self, fn: Function) -> None:
+        self.env.run_until_event(self.register(fn))
+
+    def invoke(self, function_name: str, exec_time: float,
+               mode: InvocationMode = InvocationMode.SYNC,
+               payload: Optional[Callable] = None) -> Invocation:
+        """Submit an invocation at env.now; returns the Invocation record."""
+        inv = Invocation(inv_id=next(self._inv_ids),
+                         function_name=function_name,
+                         arrival=self.env.now, exec_time=exec_time,
+                         mode=mode, payload=payload)
+        self.env.process(self._front_end(inv), name=f"inv-{inv.inv_id}")
+        return inv
+
+    def _front_end(self, inv: Invocation) -> Generator:
+        """HAProxy front-end: function-hash steering across the LB rotation
+        (which may briefly include a crashed DP until keepalived reacts)."""
+        yield self.env.timeout(self.costs.lb_hop)
+        if not self._lb_backends:
+            inv.failed = True
+            inv.failure_reason = "no data plane"
+            inv.t_done = self.env.now
+            self.collector.done(inv)
+            return
+        idx = hash(inv.function_name) % len(self._lb_backends)
+        dp = self.data_planes[self._lb_backends[idx]]
+        if not dp.alive:
+            inv.failed = True
+            inv.failure_reason = "connection refused (dead DP in rotation)"
+            inv.t_done = self.env.now
+            self.collector.done(inv)
+            return
+        if inv.mode == InvocationMode.ASYNC:
+            # async: persist to the durable queue, ack client, deliver with
+            # at-least-once retry (paper §3.4.2)
+            yield from self.store.write(f"asyncq/{inv.inv_id}", b"1")
+            self.env.process(self._async_deliver(inv, dp),
+                             name=f"async-{inv.inv_id}")
+            return
+        yield from dp.handle(inv)
+
+    def _async_deliver(self, inv: Invocation, dp: DataPlane,
+                       timeout: float = 60.0, max_retries: int = 3) -> Generator:
+        for attempt in range(max_retries + 1):
+            inv.retries = attempt
+            done = self.env.event()
+
+            def run(env, inv=inv, dp=dp, done=done):
+                yield from dp.handle(inv)
+                if not done.triggered:
+                    done.succeed("ok")
+
+            self.env.process(run(self.env), name=f"async-try-{inv.inv_id}")
+            idx, _ = yield self.env.any_of([done, self.env.timeout(timeout)])
+            if idx == 0 and not inv.failed:
+                break
+            # retry: reset failure state, re-deliver (at-least-once)
+            alive = self.data_planes_alive()
+            if not alive:
+                break
+            dp = alive[hash(inv.function_name) % len(alive)]
+            inv.failed = False
+        yield from self.store.write(f"asyncq/{inv.inv_id}", None)
+
+    # -- failure injection (paper §5.4) ----------------------------------------------
+    def fail_control_plane_leader(self) -> None:
+        leader = self.control_plane_leader()
+        if leader:
+            leader.stop()
+            self.collector.event(self.env.now, "cp-failed", leader.cp_id)
+
+    def fail_data_plane(self, dp_id: int) -> None:
+        dp = self.data_planes[dp_id]
+        dp.fail()
+        self.collector.event(self.env.now, "dp-failed", dp_id)
+
+        def lb_evict(env):
+            # keepalived health-check detection, then rotation update
+            yield env.timeout(self.costs.lb_health_check)
+            if dp_id in self._lb_backends:
+                self._lb_backends.remove(dp_id)
+        self.env.process(lb_evict(self.env), name=f"lb-evict-{dp_id}")
+        self.env.process(self._recover_data_plane(dp_id), name=f"dp-recover-{dp_id}")
+
+    def _recover_data_plane(self, dp_id: int) -> Generator:
+        """systemd restart -> re-register with CP -> pull caches -> LB reload."""
+        c = self.costs
+        yield self.env.timeout(c.systemd_restart_delay)
+        yield self.env.timeout(c.dp_resync_cost)
+        dp = self.data_planes[dp_id]
+        leader = self.control_plane_leader()
+        functions, endpoints = [], {}
+        if leader is not None:
+            functions = list(leader.functions.keys())
+            endpoints = {fn: [s for s in st.sandboxes.values()]
+                         for fn, st in leader.functions.items()}
+        dp.recover(functions, endpoints)
+        yield self.env.timeout(c.lb_reconfigure)
+        if dp_id not in self._lb_backends:
+            self._lb_backends.append(dp_id)
+            self._lb_backends.sort()
+        self.collector.event(self.env.now, "dp-recovered", dp_id)
+
+    def fail_worker_daemon(self, wid: int) -> None:
+        self.workers[wid].fail_daemon()
+        self.collector.event(self.env.now, "worker-daemon-failed", wid)
+
+    def recover_worker_daemon(self, wid: int) -> None:
+        self.workers[wid].recover_daemon()
+        leader = self.control_plane_leader()
+        if leader:
+            leader.restore_worker(wid)
+        self.collector.event(self.env.now, "worker-daemon-recovered", wid)
+
+    def fail_worker_node(self, wid: int) -> None:
+        self.workers[wid].fail_node()
+        self.collector.event(self.env.now, "worker-node-failed", wid)

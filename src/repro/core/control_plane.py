@@ -1,0 +1,345 @@
+"""Monolithic control plane (paper §3).
+
+One process-level component containing the state manager, autoscaler, placer
+and health monitor as modules that exchange information via in-memory
+channels (modeled at ``channel_op`` cost, vs RPC+etcd round-trips in K8s).
+
+Persistence policy (paper Table 3): ``Function``/``DataPlane``/``WorkerNode``
+records are written to the replicated store *at registration time*;
+``Sandbox`` state and function scheduling metrics are in-memory only and are
+reconstructed after failover (from worker nodes / DP traffic). The ablation
+flag ``persist_sandbox_state`` puts a durable write back on the cold-start
+critical path — reproducing the paper's "Dirigent optimization breakdown".
+
+The shared ``_scale_lock`` models the "shared data structures used for
+autoscaling" that the paper identifies as Dirigent's own bottleneck at
+~2500 sandbox creations/s (C1); heartbeat processing touches the same
+structures, which is what degrades throughput at 5000 workers (C9).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Generator, List, Optional, TYPE_CHECKING
+
+from repro.core.abstractions import (
+    Function, Sandbox, SandboxState, WorkerNodeInfo,
+)
+from repro.core.autoscaler import FunctionAutoscalerState
+from repro.core.costmodel import DirigentCosts
+from repro.core.metrics import Collector
+from repro.core.placement import Placer
+from repro.simcore import Environment, Interrupt
+
+if TYPE_CHECKING:
+    from repro.core.cluster import Cluster
+
+
+@dataclass
+class FunctionState:
+    function: Function
+    autoscaler: FunctionAutoscalerState
+    sandboxes: Dict[int, Sandbox] = field(default_factory=dict)
+    creating: int = 0
+
+    @property
+    def ready_count(self) -> int:
+        return sum(1 for s in self.sandboxes.values()
+                   if s.state == SandboxState.READY)
+
+
+class ControlPlane:
+    def __init__(self, env: Environment, cp_id: int, costs: DirigentCosts,
+                 cluster: "Cluster", store, collector: Collector,
+                 persist_sandbox_state: bool = False,
+                 placement_policy: str = "balanced"):
+        self.env = env
+        self.cp_id = cp_id
+        self.costs = costs
+        self.cluster = cluster
+        self.store = store
+        self.collector = collector
+        self.persist_sandbox_state = persist_sandbox_state
+        self.is_leader = False
+        self.alive = True
+        self.functions: Dict[str, FunctionState] = {}
+        self.workers: Dict[int, WorkerNodeInfo] = {}
+        self.worker_last_hb: Dict[int, float] = {}
+        self.placement_policy = placement_policy
+        self.placer = Placer(policy=placement_policy)
+        self._scale_lock = env.resource(capacity=1)
+        self._sandbox_ids = itertools.count(1)
+        self._loops = []
+        self.no_downscale_until = 0.0
+
+    # -- lifecycle -----------------------------------------------------------------
+    def start_leader(self) -> None:
+        self.is_leader = True
+        self._loops = [
+            self.env.process(self._autoscale_loop(), name=f"cp{self.cp_id}-autoscale"),
+            self.env.process(self._health_loop(), name=f"cp{self.cp_id}-health"),
+        ]
+
+    def stop(self) -> None:
+        self.alive = False
+        self.is_leader = False
+        for p in self._loops:
+            p.kill()
+        self._loops = []
+
+    # -- user API --------------------------------------------------------------------
+    def register_function(self, fn: Function) -> Generator:
+        """Register: persist the spec, propagate metadata to DPs (paper: ~2 ms)."""
+        yield self.env.timeout(self.costs.grpc_call)          # client -> CP
+        yield from self.store.write(f"function/{fn.name}", fn.persisted_record())
+        self.functions[fn.name] = FunctionState(
+            function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
+        # propagate to data planes (one batched gRPC per DP)
+        for dp in self.cluster.data_planes_alive():
+            yield self.env.timeout(self.costs.grpc_call)
+            dp.sync_functions([fn.name])
+        return fn.name
+
+    def deregister_function(self, name: str) -> Generator:
+        yield from self.store.write(f"function/{name}", None)
+        st = self.functions.pop(name, None)
+        if st:
+            for sb in list(st.sandboxes.values()):
+                yield from self._teardown_sandbox(st, sb)
+
+    # -- component registration ---------------------------------------------------------
+    def register_worker(self, info: WorkerNodeInfo) -> Generator:
+        yield from self.store.write(f"worker/{info.worker_id}",
+                                    info.persisted_record())
+        self.workers[info.worker_id] = info
+        self.worker_last_hb[info.worker_id] = self.env.now
+        self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
+                             info.mem_capacity_mb)
+
+    def register_data_plane(self, dp_info) -> Generator:
+        yield from self.store.write(f"dataplane/{dp_info.dp_id}",
+                                    dp_info.persisted_record())
+
+    # -- metrics ingestion (from DPs) ------------------------------------------------------
+    def receive_metric(self, dp_id: int, fn: str, inflight: int,
+                       urgent: bool = False) -> Generator:
+        yield self.env.timeout(self.costs.grpc_call)
+        if not (self.alive and self.is_leader):
+            return
+        st = self.functions.get(fn)
+        if st is None:
+            return
+        st.autoscaler.record_metric(self.env.now, float(inflight))
+        if urgent:
+            # Event-driven fast path: a queue formed with zero free slots.
+            yield from self._reconcile_function(fn, st)
+
+    def receive_metric_batch(self, dp_id: int, report: Dict[str, int]) -> Generator:
+        yield self.env.timeout(self.costs.grpc_call)
+        if not (self.alive and self.is_leader):
+            return
+        for fn, inflight in report.items():
+            st = self.functions.get(fn)
+            if st is not None:
+                st.autoscaler.record_metric(self.env.now, float(inflight))
+
+    def heartbeat(self, worker_id: int) -> None:
+        """Worker heartbeat. Touches the shared health/state structures."""
+        if not self.alive:
+            return
+        self.worker_last_hb[worker_id] = self.env.now
+        # contention: heartbeat processing holds the shared state lock
+        def hb(env):
+            yield self._scale_lock.acquire()
+            try:
+                yield env.timeout(self.costs.cp_heartbeat_lock_hold)
+            finally:
+                self._scale_lock.release()
+        self.env.process(hb(self.env), name="hb-touch")
+
+    # -- autoscaling ------------------------------------------------------------------------
+    def _autoscale_loop(self) -> Generator:
+        while True:
+            yield self.env.timeout(self.costs.autoscale_period)
+            for fn, st in list(self.functions.items()):
+                yield from self._reconcile_function(fn, st)
+
+    def _reconcile_function(self, fn: str, st: FunctionState) -> Generator:
+        """Compute desired scale and act on the difference."""
+        yield self.env.timeout(self.costs.cp_sched_cpu)
+        current = st.ready_count + st.creating
+        desired = st.autoscaler.desired(self.env.now, current)
+        if self.env.now < self.no_downscale_until:
+            desired = max(desired, current)     # post-recovery hold (§3.4.1)
+        if desired > current:
+            for _ in range(desired - current):
+                st.creating += 1
+                self.env.process(self._create_sandbox(st),
+                                 name=f"create-{fn}")
+        elif desired < current:
+            victims = self._pick_victims(st, current - desired)
+            for sb in victims:
+                yield from self._teardown_sandbox(st, sb)
+
+    def _pick_victims(self, st: FunctionState, n: int) -> List[Sandbox]:
+        ready = [s for s in st.sandboxes.values()
+                 if s.state == SandboxState.READY]
+        ready.sort(key=lambda s: -s.sandbox_id)    # newest first
+        return ready[:n]
+
+    # -- sandbox creation (the latency-critical path) --------------------------------------------
+    def _create_sandbox(self, st: FunctionState) -> Generator:
+        fn = st.function
+        try:
+            # shared autoscaling/cluster-state structures (C1 bottleneck)
+            yield self._scale_lock.acquire()
+            try:
+                yield self.env.timeout(self.costs.cp_scale_lock_hold)
+                wid = self.placer.place(fn.scaling.cpu_req_millis,
+                                        fn.scaling.mem_req_mb)
+            finally:
+                self._scale_lock.release()
+            if wid is None:
+                return  # no capacity in the cluster
+
+            sb = Sandbox(
+                sandbox_id=next(self._sandbox_ids),
+                function_name=fn.name,
+                ip=self.workers[wid].ip, port=fn.port, worker_id=wid,
+            )
+            st.sandboxes[sb.sandbox_id] = sb
+
+            if self.persist_sandbox_state:
+                # ABLATION: durable write on the critical path (paper §5.2.1
+                # "optimization breakdown") — this is what Dirigent removes.
+                yield from self.store.write(f"sandbox/{sb.key}", sb.to_bytes())
+
+            worker = self.cluster.worker_by_id(wid)
+            yield self.env.timeout(self.costs.grpc_call)   # CP -> worker
+            try:
+                yield self.env.process(worker.create_sandbox(sb),
+                                       name=f"boot-{sb.key}")
+            except (RuntimeError, Interrupt):
+                st.sandboxes.pop(sb.sandbox_id, None)
+                self.placer.release(wid, fn.scaling.cpu_req_millis,
+                                    fn.scaling.mem_req_mb)
+                return
+            yield self.env.timeout(self.costs.grpc_call)   # ready notification
+            if not (self.alive and self.is_leader):
+                return
+            sb.state = SandboxState.READY
+            self.collector.sandbox_creations += 1
+            self.collector.event(self.env.now, "sandbox-created", fn.name)
+            # in-memory state update + endpoint broadcast to DPs
+            yield self.env.timeout(self.costs.channel_op)
+            for dp in self.cluster.data_planes_alive():
+                yield self.env.timeout(self.costs.grpc_call)
+                dp.add_endpoint(fn.name, sb)
+        finally:
+            st.creating = max(0, st.creating - 1)
+
+    def _teardown_sandbox(self, st: FunctionState, sb: Sandbox) -> Generator:
+        # teardown runs in the asynchronous autoscaling loop, off the
+        # latency-critical path (paper §4 "Sandbox teardown") — it does not
+        # contend the scale lock
+        yield self.env.timeout(self.costs.channel_op)
+        sb.state = SandboxState.TERMINATING
+        st.sandboxes.pop(sb.sandbox_id, None)
+        if self.persist_sandbox_state:
+            yield from self.store.write(f"sandbox/{sb.key}", None)
+        for dp in self.cluster.data_planes_alive():
+            dp.remove_endpoint(st.function.name, sb.sandbox_id)
+        worker = self.cluster.worker_by_id(sb.worker_id)
+        if worker is not None:
+            # drain grace: in-flight requests already dispatched to this
+            # sandbox finish before the worker dismantles it
+            def drain_then_kill(env, worker=worker, sid=sb.sandbox_id):
+                yield env.timeout(self.costs.teardown_drain_grace)
+                yield from worker.kill_sandbox(sid)
+            self.env.process(drain_then_kill(self.env),
+                             name=f"kill-{sb.key}")
+        self.placer.release(sb.worker_id,
+                            st.function.scaling.cpu_req_millis,
+                            st.function.scaling.mem_req_mb)
+        self.collector.sandbox_teardowns += 1
+
+    # -- health monitoring -----------------------------------------------------------------------
+    def _health_loop(self) -> Generator:
+        c = self.costs
+        while True:
+            yield self.env.timeout(c.worker_heartbeat_period)
+            now = self.env.now
+            for wid, last in list(self.worker_last_hb.items()):
+                if now - last > c.worker_heartbeat_timeout:
+                    yield from self._evict_worker(wid)
+
+    def _evict_worker(self, wid: int) -> Generator:
+        """Worker declared dead: stop routing, reschedule its sandboxes."""
+        self.worker_last_hb.pop(wid, None)
+        self.placer.set_schedulable(wid, False)
+        affected: List[tuple] = []
+        for fn, st in self.functions.items():
+            for sb in [s for s in st.sandboxes.values() if s.worker_id == wid]:
+                st.sandboxes.pop(sb.sandbox_id, None)
+                affected.append((fn, sb.sandbox_id))
+        for dp in self.cluster.data_planes_alive():
+            yield self.env.timeout(self.costs.grpc_call)
+            for fn, sid in affected:
+                dp.remove_endpoint(fn, sid, drain=False)
+        self.collector.event(self.env.now, "worker-evicted", wid)
+        # re-run autoscaling promptly to replace lost capacity
+        for fn, st in list(self.functions.items()):
+            yield from self._reconcile_function(fn, st)
+
+    def restore_worker(self, wid: int) -> None:
+        self.worker_last_hb[wid] = self.env.now
+        self.placer.set_schedulable(wid, True)
+
+    # -- failover recovery (new leader) ----------------------------------------------------------
+    def recover_as_leader(self) -> Generator:
+        """Paper §3.4.1: fetch persisted records, reconnect, reconstruct
+        sandbox state from worker nodes asynchronously."""
+        c = self.costs
+        yield self.env.timeout(c.cp_recovery_db_fetch)
+        func_records = yield from self.store.read_prefix("function/")
+        worker_records = yield from self.store.read_prefix("worker/")
+        self.functions = {}
+        for key, rec in func_records.items():
+            fn = Function.from_record(rec)
+            self.functions[fn.name] = FunctionState(
+                function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
+        self.workers = {}
+        self.placer = Placer(policy=self.placement_policy)
+        for key, rec in worker_records.items():
+            info = WorkerNodeInfo.from_record(rec)
+            self.workers[info.worker_id] = info
+            self.worker_last_hb[info.worker_id] = self.env.now
+            self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
+                                 info.mem_capacity_mb)
+        # sync DP caches with the function list
+        yield self.env.timeout(c.cp_recovery_dp_sync)
+        names = list(self.functions.keys())
+        for dp in self.cluster.data_planes_alive():
+            dp.sync_functions(names)
+        # post-recovery: hold downscaling for one autoscaling window
+        self.no_downscale_until = self.env.now + c.recovery_no_downscale
+        self.start_leader()
+        # async: workers push their sandbox lists; merge as they arrive
+        for wid in list(self.workers.keys()):
+            self.env.process(self._merge_worker_sandboxes(wid),
+                             name=f"merge-{wid}")
+
+    def _merge_worker_sandboxes(self, wid: int) -> Generator:
+        yield self.env.timeout(self.costs.grpc_call)
+        worker = self.cluster.worker_by_id(wid)
+        if worker is None or not worker.daemon_alive:
+            return
+        for sb in worker.list_sandboxes():
+            st = self.functions.get(sb.function_name)
+            if st is None:
+                continue
+            st.sandboxes[sb.sandbox_id] = sb
+            self.placer.commit(wid, st.function.scaling.cpu_req_millis,
+                               st.function.scaling.mem_req_mb)
+            for dp in self.cluster.data_planes_alive():
+                dp.add_endpoint(sb.function_name, sb)

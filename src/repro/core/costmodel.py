@@ -1,0 +1,173 @@
+"""Calibrated service-time constants for the cluster-manager simulations.
+
+Every constant is traceable either to a number stated in the paper or to a
+calibration target (a paper claim C1..C12, see DESIGN.md §1). The *loaded*
+behaviour — saturation throughput, tail blow-ups — is NOT encoded here; it
+emerges from queueing at the modeled resources.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class DirigentCosts:
+    # -- networking --------------------------------------------------------
+    grpc_call: float = 0.3e-3          # one gRPC hop (paper §4: components talk gRPC)
+    lb_hop: float = 0.2e-3             # HAProxy front-end hop
+    channel_op: float = 2e-6           # in-memory Go channel handoff (monolith)
+    worker_nat_hop: float = 0.2e-3     # iptables NAT on the worker node
+    hop_jitter_sigma: float = 0.35     # lognormal jitter on network hops (p99)
+
+    # -- data plane ---------------------------------------------------------
+    dp_proxy_cpu: float = 0.15e-3      # per-request CPU in the DP proxy
+    dp_cores: int = 10                 # xl170: 10 physical cores
+    dp_port_pool: int = 28_000         # ephemeral ports per DP node
+    dp_port_hold: float = 20.0         # TIME_WAIT-ish hold per connection
+    metrics_report_period: float = 0.25  # DP -> CP autoscaling metric push
+
+    # -- control plane ------------------------------------------------------
+    cp_sched_cpu: float = 0.05e-3      # autoscale+place decision compute ("fast")
+    cp_heartbeat_lock_hold: float = 12e-6  # heartbeat touch of shared health
+    #                                    structures (C9: degrades creation
+    #                                    throughput at 5000 workers)
+    cp_scale_lock_hold: float = 0.36e-3  # shared autoscaling state lock per
+    #                                    sandbox create/destroy. C1: caps the CP
+    #                                    at ~2500 creations/s (paper: "access
+    #                                    congestion on shared data structures
+    #                                    used for autoscaling").
+    autoscale_period: float = 2.0      # autoscaler evaluation tick (KPA default)
+    recovery_no_downscale: float = 60.0  # paper §3.4.1
+
+    # -- persistence (Redis, AOF fsync always) -------------------------------
+    persist_write: float = 0.85e-3     # fsync'd append median (C3 ablation:
+    #                                    caps at ~1000 creations/s when sandbox
+    #                                    state is persisted on the critical path)
+    persist_write_sigma: float = 0.4   # lognormal fsync jitter
+    persist_stall_prob: float = 0.002  # AOF-rewrite stalls (Redis): rare but
+    persist_stall: float = 0.120       # long WAL holds -> p99 surge at ~500/s
+    persist_read: float = 0.2e-3
+    persist_replication: float = 0.5e-3  # sync replication to standbys
+
+    # -- worker node ---------------------------------------------------------
+    containerd_create_median: float = 0.110  # s; "10-100s of ms" regime
+    containerd_create_sigma: float = 0.30
+    containerd_kernel_lock: float = 0.052  # serialized per-node kernel time:
+    #                                  caps a 93-node cluster at ~1750/s (C2)
+    firecracker_create_median: float = 0.040  # p50 snapshot restore (paper §5.2.3)
+    firecracker_create_sigma: float = 0.25
+    firecracker_kernel_lock: float = 0.010
+    netcfg_pool_size: int = 64          # pre-created network configs per node
+    netcfg_replenish_period: float = 0.025  # background pre-creation rate
+    netcfg_pooled: float = 1.0e-3       # grab a recycled netns+iptables entry
+    netcfg_fresh: float = 0.060         # Linux net-stack cost when pool empty
+    netcfg_recycle: float = 0.020       # background recycle time
+    health_probe_period: float = 0.010  # worker daemon -> sandbox probe
+    sandbox_teardown: float = 0.030     # dismantle fs/netns/cgroups (async)
+    teardown_drain_grace: float = 0.5   # let dispatched requests finish
+    exec_slot_overhead: float = 0.05e-3
+
+    # -- heartbeats / failure detection --------------------------------------
+    worker_heartbeat_period: float = 0.5
+    worker_heartbeat_timeout: float = 1.5
+    raft_heartbeat_period: float = 0.002
+    raft_election_timeout: float = 0.006   # C10: ~10 ms total CP failover
+    raft_election_cost: float = 0.001
+    cp_recovery_db_fetch: float = 0.002
+    cp_recovery_dp_sync: float = 0.001
+    systemd_restart_delay: float = 0.8     # detect+restart a crashed process
+    dp_resync_cost: float = 0.2            # pull functions+endpoints from CP
+    lb_reconfigure: float = 1.0            # keepalived/HAProxy reload (C11: ~2s)
+    lb_health_check: float = 0.6           # keepalived failure detection
+
+    # -- misc -----------------------------------------------------------------
+    registration_persist_ops: int = 1      # one record write + DP broadcast
+    worker_kill_detect: float = 0.05
+
+
+@dataclass
+class KnativeCosts:
+    """K8s/Knative mechanism constants (baseline simulator).
+
+    Calibration targets: ≤2 cold starts/s steady-state saturation (C1),
+    ~770 ms unloaded function registration (C8), ~400 ms sandbox boot with a
+    sequential sidecar + ~500 ms readiness-probe wait (Fig 1), warm-path p50
+    ≈7 ms capping at ~1200/s (C5), DP recovery ≈15 s dominated by the Istio
+    gateway (C11).
+    """
+
+    # -- API server / etcd -----------------------------------------------------
+    apiserver_cores: int = 4            # effective parallelism before lock
+    #                                     contention (10-core node, Go runtime)
+    serialize_per_kb: float = 1.2e-3    # CPU to (de)serialize+validate 1 KB of
+    #                                     nested-YAML object state
+    object_kb: float = 17.0             # average K8s object size (paper §2.2)
+    small_object_kb: float = 4.0        # endpoints/lease-ish updates
+    etcd_fsync: float = 2.0e-3          # serialized WAL append+fsync
+    etcd_read: float = 0.5e-3
+    rpc: float = 0.5e-3                 # controller <-> API server hop
+    watch_propagation: float = 5.0e-3   # informer cache lag
+    # Asynchronous per-creation API-server work OFF the sequential chain but
+    # ON the same CPU: Event objects, status updates, informer resyncs, istio
+    # xDS pushes. This is what saturates the API server at ~2 cold starts/s
+    # (C1) while unloaded chain latency stays a few hundred ms (Fig 1).
+    bg_cpu_per_creation: float = 1.7
+    bg_chunk: float = 0.1
+    bg_spread: float = 30.0             # the async work trickles in over ~30 s
+
+    # -- controller machinery ----------------------------------------------------
+    # Sequential reconcile chain for one sandbox (Deployment -> ReplicaSet ->
+    # Pod -> scheduler Binding -> kubelet status -> Endpoints -> SKS/Route),
+    # each step = watch wakeup + read + RMW write of a large object.
+    creation_chain_ops: int = 10
+    controller_qps: float = 20.0        # kube-controller-manager --kube-api-qps
+    controller_burst: int = 30
+    workqueue_workers: int = 8          # concurrent reconciles per controller
+    scheduler_bind: float = 0.008       # ~125 binds/s scheduler throughput
+    conflict_window: float = 0.050      # optimistic-concurrency conflict if two
+    #                                     RMWs to the same object overlap
+    conflict_backoff: float = 0.020
+    reconcile_resync: float = 10.0      # periodic resync scan period
+
+    # -- sandbox / pod startup -----------------------------------------------------
+    user_container_create: float = 0.200
+    sidecar_create: float = 0.200       # queue-proxy, created sequentially
+    readiness_probe_wait: float = 0.500  # both containers pass probes (Fig 1)
+    kubelet_sync_period: float = 0.100
+
+    # -- warm path -------------------------------------------------------------
+    activator_cpu: float = 2.2e-3       # per-request CPU in activator path
+    activator_cores: int = 3            # activator replicas: caps warm path at
+    #                                     ~1200-1400 req/s (C5)
+    queue_proxy_hop: float = 1.5e-3
+    istio_hop: float = 2.0e-3
+    pod_hop: float = 0.5e-3             # activator -> pod network hop
+    lb_hop: float = 0.2e-3
+
+    # -- registration -----------------------------------------------------------
+    registration_objects: int = 10      # service, config, revision, route, SKS,
+    #                                     deployment, cert, istio VirtualService...
+    registration_xds_sync: float = 0.030  # ingress/xDS sync per object
+    registration_growth: float = 5.6e-3  # extra CPU per pre-existing function
+    #                                     (ingress/route table resync) -> "18 min
+    #                                     for 500 functions" (C8)
+
+    # -- failure recovery ----------------------------------------------------------
+    pod_restart_delay: float = 2.0      # k8s notices + restarts a component pod
+    component_recover_spread: float = 4.0
+    istio_gateway_recover: float = 13.0  # slowest component (C11)
+    worker_eviction_timeout: float = 5.0
+
+    # -- autoscaler ------------------------------------------------------------
+    autoscale_period: float = 2.0
+    metrics_report_period: float = 1.0
+    scale_up_decision_lag: float = 2.0  # KPA tick + activator stat lag
+
+
+@dataclass
+class CostModel:
+    dirigent: DirigentCosts = field(default_factory=DirigentCosts)
+    knative: KnativeCosts = field(default_factory=KnativeCosts)
+
+
+DEFAULT_COSTS = CostModel()

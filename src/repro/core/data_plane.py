@@ -1,0 +1,300 @@
+"""Monolithic data plane (paper §3.2, §3.3).
+
+One process-level component owning, for every function steered to it:
+
+  * the per-function request queue (requests waiting for a sandbox — this is
+    what replaces Knative's per-sandbox queue-proxy sidecars);
+  * the endpoint list (ready sandboxes) with per-sandbox concurrency slots
+    (throttling, default 1 request at a time);
+  * least-loaded load balancing across endpoints (Knative default policy);
+  * autoscaling metric reports to the control plane (periodic + an immediate
+    push when a queue forms with zero capacity — a cold start).
+
+The front-end LB steers invocations by function-ID hash, so all invocations
+of a function land on one DP replica and in-flight accounting is centralized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Generator, List, Optional, TYPE_CHECKING
+
+from repro.core.abstractions import Sandbox
+from repro.core.costmodel import DirigentCosts
+from repro.core.metrics import Collector
+from repro.core.request import Invocation
+from repro.simcore import Environment, Event
+
+if TYPE_CHECKING:
+    from repro.core.control_plane import ControlPlane
+    from repro.core.cluster import Cluster
+
+
+@dataclass
+class Endpoint:
+    sandbox: Sandbox
+    capacity: int = 1           # concurrency throttle (paper: 1 req at a time)
+    in_use: int = 0
+    draining: bool = False
+
+    @property
+    def free(self) -> int:
+        return 0 if self.draining else self.capacity - self.in_use
+
+
+@dataclass
+class FunctionTable:
+    endpoints: Dict[int, Endpoint] = field(default_factory=dict)
+    queue: List[Invocation] = field(default_factory=list)
+    inflight: int = 0           # executing + queued (the autoscaling signal)
+    creating_hint: int = 0      # CP-echoed count (metric freshness only)
+
+
+class DataPlane:
+    def __init__(self, env: Environment, dp_id: int, costs: DirigentCosts,
+                 cluster: "Cluster", collector: Collector,
+                 concurrency: int = 1, hedge_after: Optional[float] = None,
+                 lb_policy: str = "least_loaded"):
+        self.env = env
+        self.dp_id = dp_id
+        self.costs = costs
+        self.cluster = cluster
+        self.collector = collector
+        self.concurrency = concurrency
+        self.hedge_after = hedge_after   # straggler mitigation (None = off)
+        self.hedged = 0
+        self.hedge_wins = 0
+        from repro.core.policies import LB_POLICIES
+        self.lb_policy = lb_policy
+        self._lb_pick = LB_POLICIES[lb_policy]
+        self.alive = True
+        self.tables: Dict[str, FunctionTable] = {}
+        self._cpu = env.resource(capacity=costs.dp_cores)
+        self._ports = env.resource(capacity=costs.dp_port_pool)
+        self._dirty: set[str] = set()   # functions with metric changes
+        self._rng = env.rng(f"dp-{dp_id}")
+        self._procs = []
+        self._procs.append(env.process(self._metrics_loop(), name=f"dp{dp_id}-metrics"))
+        self.inflight_requests: List[Invocation] = []
+
+    # -- control-plane-driven state ------------------------------------------------
+    def sync_functions(self, names: List[str]) -> None:
+        for n in names:
+            self.tables.setdefault(n, FunctionTable())
+
+    def add_endpoint(self, fn: str, sandbox: Sandbox) -> None:
+        tbl = self.tables.setdefault(fn, FunctionTable())
+        if sandbox.sandbox_id not in tbl.endpoints:
+            tbl.endpoints[sandbox.sandbox_id] = Endpoint(
+                sandbox=sandbox, capacity=self.concurrency)
+        self._drain_queue(fn)
+
+    def remove_endpoint(self, fn: str, sandbox_id: int, drain: bool = True) -> None:
+        tbl = self.tables.get(fn)
+        if not tbl:
+            return
+        ep = tbl.endpoints.get(sandbox_id)
+        if ep is None:
+            return
+        if drain and ep.in_use > 0:
+            ep.draining = True
+        else:
+            tbl.endpoints.pop(sandbox_id, None)
+
+    def endpoint_count(self, fn: str) -> int:
+        tbl = self.tables.get(fn)
+        return len(tbl.endpoints) if tbl else 0
+
+    # -- request path --------------------------------------------------------------
+    def handle(self, inv: Invocation) -> Generator:
+        """Full life of a request inside this DP (called by the front-end LB)."""
+        c = self.costs
+        inv.t_dp_arrival = self.env.now
+        tbl = self.tables.get(inv.function_name)
+        if tbl is None:
+            inv.failed = True
+            inv.failure_reason = "unknown function"
+            inv.t_done = self.env.now
+            self.collector.done(inv)
+            return
+
+        tbl.inflight += 1
+        self.inflight_requests.append(inv)
+        try:
+            # proxy CPU cost
+            yield self._cpu.acquire()
+            try:
+                yield self.env.timeout(c.dp_proxy_cpu)
+            finally:
+                self._cpu.release()
+
+            ep = self._pick_endpoint(tbl, fn=inv.function_name)
+            if ep is None:
+                # cold or saturated: queue, and push a metric immediately if
+                # there is no capacity at all for this function.
+                inv.t_queued = self.env.now
+                inv.cold = self.endpoint_count(inv.function_name) == 0
+                waiter = self.env.event()
+                tbl.queue.append(inv)
+                inv._waiter = waiter            # type: ignore[attr-defined]
+                self._notify_cp_now(inv.function_name, tbl)
+                ep = yield waiter               # an Endpoint when dispatched
+            yield from self._proxy(inv, tbl, ep)
+        finally:
+            tbl.inflight = max(0, tbl.inflight - 1)
+            self._dirty.add(inv.function_name)
+            try:
+                self.inflight_requests.remove(inv)
+            except ValueError:
+                pass
+
+    def _pick_endpoint(self, tbl: FunctionTable,
+                       exclude: Optional[int] = None,
+                       fn: str = "") -> Optional[Endpoint]:
+        """Pick an endpoint per the configured LB policy (default:
+        least-loaded, the Knative policy used by every benchmark)."""
+        best = self._lb_pick(tbl.endpoints, fn, exclude=exclude)
+        if best is not None:
+            best.in_use += 1   # reserve the slot synchronously
+        return best
+
+    def _proxy(self, inv: Invocation, tbl: FunctionTable, ep: Endpoint) -> Generator:
+        c = self.costs
+        inv.t_dispatch = self.env.now
+        worker = self.cluster.worker_by_id(ep.sandbox.worker_id)
+        yield self._ports.acquire()
+        hedge_ep = None
+        try:
+            jit = self._rng.lognormal(1.0, c.hop_jitter_sigma)
+            yield self.env.timeout(c.grpc_call * jit)   # DP -> worker hop
+            inv.t_exec_start = self.env.now
+            primary = self.env.process(
+                worker.execute(ep.sandbox.sandbox_id, inv.exec_time,
+                               inv.payload), name=f"exec-{inv.inv_id}")
+            try:
+                if self.hedge_after is None:
+                    inv.result = yield primary
+                else:
+                    # straggler mitigation: after hedge_after with no reply,
+                    # duplicate the request onto another endpoint and take
+                    # whichever finishes first (idempotent functions; paper
+                    # §2.1 R3 request-level semantics)
+                    idx, val = yield self.env.any_of(
+                        [primary, self.env.timeout(self.hedge_after)])
+                    if idx == 0:
+                        inv.result = val
+                    else:
+                        hedge_ep = self._pick_endpoint(
+                            tbl, exclude=ep.sandbox.sandbox_id,
+                            fn=inv.function_name)
+                        if hedge_ep is None:
+                            inv.result = yield primary
+                        else:
+                            self.hedged += 1
+                            w2 = self.cluster.worker_by_id(
+                                hedge_ep.sandbox.worker_id)
+                            backup = self.env.process(
+                                w2.execute(hedge_ep.sandbox.sandbox_id,
+                                           inv.exec_time, inv.payload),
+                                name=f"hedge-{inv.inv_id}")
+                            idx2, val2 = yield self.env.any_of(
+                                [primary, backup])
+                            inv.result = val2
+                            if idx2 == 1:
+                                self.hedge_wins += 1
+                                primary.kill()
+                            else:
+                                backup.kill()
+            except RuntimeError as e:
+                inv.failed = True
+                inv.failure_reason = str(e)
+            yield self.env.timeout(
+                c.grpc_call * self._rng.lognormal(1.0, c.hop_jitter_sigma))
+        finally:
+            # ephemeral port held in TIME_WAIT after the connection closes
+            def port_hold(env, ports=self._ports):
+                yield env.timeout(c.dp_port_hold)
+                ports.release()
+            self.env.process(port_hold(self.env), name="port-hold")
+        inv.t_done = self.env.now
+        self.collector.done(inv)
+        if hedge_ep is not None:
+            self._release_slot(tbl, hedge_ep)
+        self._release_slot(tbl, ep)
+
+    def _release_slot(self, tbl: FunctionTable, ep: Endpoint) -> None:
+        ep.in_use -= 1
+        if ep.draining and ep.in_use == 0:
+            tbl.endpoints.pop(ep.sandbox.sandbox_id, None)
+        self._drain_queue_tbl(tbl)
+
+    def _drain_queue(self, fn: str) -> None:
+        tbl = self.tables.get(fn)
+        if tbl:
+            self._drain_queue_tbl(tbl)
+
+    def _drain_queue_tbl(self, tbl: FunctionTable) -> None:
+        while tbl.queue:
+            head = tbl.queue[0]
+            ep = self._pick_endpoint(tbl, fn=head.function_name)
+            if ep is None:
+                return
+            inv = tbl.queue.pop(0)
+            inv._waiter.succeed(ep)   # type: ignore[attr-defined]
+
+    # -- metrics -------------------------------------------------------------------
+    def _notify_cp_now(self, fn: str, tbl: FunctionTable) -> None:
+        """Immediate scaling hint when requests wait with zero free capacity."""
+        if not self.alive:
+            return
+        cp = self.cluster.control_plane_leader()
+        if cp is None:
+            return
+        free = sum(ep.free for ep in tbl.endpoints.values())
+        if free == 0:
+            self.env.process(
+                cp.receive_metric(self.dp_id, fn, tbl.inflight, urgent=True),
+                name="metric-push")
+
+    def _metrics_loop(self) -> Generator:
+        c = self.costs
+        while True:
+            yield self.env.timeout(c.metrics_report_period)
+            if not self.alive:
+                continue
+            cp = self.cluster.control_plane_leader()
+            if cp is None:
+                continue
+            # one batched report covering every active function on this DP
+            report = {fn: tbl.inflight for fn, tbl in self.tables.items()
+                      if tbl.inflight > 0 or fn in self._dirty}
+            self._dirty.clear()
+            if report:
+                self.env.process(cp.receive_metric_batch(self.dp_id, report),
+                                 name="metric-batch")
+
+    # -- failure -------------------------------------------------------------------
+    def fail(self) -> List[Invocation]:
+        """Crash: all in-flight requests on this DP fail (client conns lost)."""
+        self.alive = False
+        dropped = list(self.inflight_requests)
+        for inv in dropped:
+            if inv.t_done < 0:
+                inv.failed = True
+                inv.failure_reason = "data plane crash"
+                inv.t_done = self.env.now
+                self.collector.done(inv)
+        self.inflight_requests.clear()
+        for tbl in self.tables.values():
+            tbl.queue.clear()
+            tbl.inflight = 0
+            tbl.endpoints.clear()
+        return dropped
+
+    def recover(self, functions: List[str],
+                endpoints: Dict[str, List[Sandbox]]) -> None:
+        """Re-register with CP and repopulate caches (paper §3.4.1)."""
+        self.alive = True
+        self.sync_functions(functions)
+        for fn, sbs in endpoints.items():
+            for sb in sbs:
+                self.add_endpoint(fn, sb)

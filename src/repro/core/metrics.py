@@ -1,0 +1,93 @@
+"""Experiment metric collection: per-invocation records, percentiles, CDFs."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.request import Invocation
+
+
+def percentile(xs: Iterable[float], p: float) -> float:
+    arr = np.asarray(list(xs), dtype=np.float64)
+    if arr.size == 0:
+        return float("nan")
+    return float(np.percentile(arr, p))
+
+
+def geomean(xs: Iterable[float]) -> float:
+    arr = np.asarray(list(xs), dtype=np.float64)
+    arr = arr[arr > 0]
+    if arr.size == 0:
+        return float("nan")
+    return float(np.exp(np.mean(np.log(arr))))
+
+
+@dataclass
+class Collector:
+    invocations: List[Invocation] = field(default_factory=list)
+    events: List[tuple] = field(default_factory=list)   # (t, kind, detail)
+    sandbox_creations: int = 0
+    sandbox_teardowns: int = 0
+
+    def done(self, inv: Invocation) -> None:
+        self.invocations.append(inv)
+
+    def event(self, t: float, kind: str, detail: object = None) -> None:
+        self.events.append((t, kind, detail))
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def completed(self) -> List[Invocation]:
+        return [i for i in self.invocations if not i.failed]
+
+    @property
+    def failed(self) -> List[Invocation]:
+        return [i for i in self.invocations if i.failed]
+
+    def sched_latencies(self, warmup: float = 0.0) -> np.ndarray:
+        return np.array([i.scheduling_latency for i in self.completed
+                         if i.arrival >= warmup], dtype=np.float64)
+
+    def slowdowns(self, warmup: float = 0.0) -> np.ndarray:
+        return np.array([i.slowdown for i in self.completed
+                         if i.arrival >= warmup], dtype=np.float64)
+
+    def e2e_latencies(self, warmup: float = 0.0) -> np.ndarray:
+        return np.array([i.e2e_latency for i in self.completed
+                         if i.arrival >= warmup], dtype=np.float64)
+
+    def per_function_mean_sched(self, warmup: float = 0.0) -> Dict[str, float]:
+        acc: Dict[str, List[float]] = defaultdict(list)
+        for i in self.completed:
+            if i.arrival >= warmup:
+                acc[i.function_name].append(i.scheduling_latency)
+        return {f: float(np.mean(v)) for f, v in acc.items()}
+
+    def per_function_geomean_slowdown(self, warmup: float = 0.0) -> Dict[str, float]:
+        acc: Dict[str, List[float]] = defaultdict(list)
+        for i in self.completed:
+            if i.arrival >= warmup:
+                acc[i.function_name].append(i.slowdown)
+        return {f: geomean(v) for f, v in acc.items()}
+
+    def summary(self, warmup: float = 0.0) -> Dict[str, float]:
+        sched = self.sched_latencies(warmup)
+        slow = self.slowdowns(warmup)
+        pf_sched = list(self.per_function_mean_sched(warmup).values())
+        pf_slow = list(self.per_function_geomean_slowdown(warmup).values())
+        return {
+            "n_completed": len(self.completed),
+            "n_failed": len(self.failed),
+            "sched_p50_ms": percentile(sched, 50) * 1e3,
+            "sched_p99_ms": percentile(sched, 99) * 1e3,
+            "slowdown_p50": percentile(slow, 50),
+            "slowdown_p99": percentile(slow, 99),
+            "perfn_sched_p50_ms": percentile(pf_sched, 50) * 1e3,
+            "perfn_sched_p99_ms": percentile(pf_sched, 99) * 1e3,
+            "perfn_slowdown_p50": percentile(pf_slow, 50),
+            "perfn_slowdown_p99": percentile(pf_slow, 99),
+            "sandbox_creations": self.sandbox_creations,
+        }

@@ -1,0 +1,67 @@
+"""Operations & monitoring (paper §4).
+
+"Dirigent components expose global and per-function metrics (e.g., the
+number of in-flight requests, queue depth, and number of successful
+invocations) via HTTP" — this module renders that endpoint's payload
+(Prometheus text exposition format) from live cluster state, plus the
+event-log view used to break down end-to-end function latency.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, List
+
+if TYPE_CHECKING:
+    from repro.core.cluster import Cluster
+
+
+def render_metrics(cluster: "Cluster") -> str:
+    """Prometheus-style text exposition of global + per-function metrics."""
+    lines: List[str] = []
+    c = cluster.collector
+    lines.append("# TYPE dirigent_invocations_total counter")
+    lines.append(f"dirigent_invocations_total{{status=\"ok\"}} "
+                 f"{len(c.completed)}")
+    lines.append(f"dirigent_invocations_total{{status=\"failed\"}} "
+                 f"{len(c.failed)}")
+    lines.append("# TYPE dirigent_sandbox_creations_total counter")
+    lines.append(f"dirigent_sandbox_creations_total {c.sandbox_creations}")
+    lines.append(f"dirigent_sandbox_teardowns_total {c.sandbox_teardowns}")
+    lines.append("# TYPE dirigent_persistent_writes_total counter")
+    lines.append(f"dirigent_persistent_writes_total {cluster.store.write_count}")
+
+    leader = cluster.control_plane_leader()
+    lines.append("# TYPE dirigent_control_plane_leader gauge")
+    lines.append(f"dirigent_control_plane_leader "
+                 f"{leader.cp_id if leader else -1}")
+    if leader is not None:
+        lines.append("# TYPE dirigent_function_ready_sandboxes gauge")
+        for name, st in sorted(leader.functions.items()):
+            lines.append(f"dirigent_function_ready_sandboxes"
+                         f"{{function=\"{name}\"}} {st.ready_count}")
+            lines.append(f"dirigent_function_creating"
+                         f"{{function=\"{name}\"}} {st.creating}")
+    lines.append("# TYPE dirigent_dp_inflight gauge")
+    for dp in cluster.data_planes:
+        total_inflight = sum(t.inflight for t in dp.tables.values())
+        depth = sum(len(t.queue) for t in dp.tables.values())
+        lines.append(f"dirigent_dp_inflight{{dp=\"{dp.dp_id}\","
+                     f"alive=\"{dp.alive}\"}} {total_inflight}")
+        lines.append(f"dirigent_dp_queue_depth{{dp=\"{dp.dp_id}\"}} {depth}")
+        if dp.hedge_after is not None:
+            lines.append(f"dirigent_dp_hedged_total{{dp=\"{dp.dp_id}\"}} "
+                         f"{dp.hedged}")
+    lines.append("# TYPE dirigent_worker_alive gauge")
+    alive = sum(1 for w in cluster.workers.values() if w.daemon_alive)
+    lines.append(f"dirigent_workers_alive {alive}")
+    lines.append(f"dirigent_workers_total {len(cluster.workers)}")
+    return "\n".join(lines) + "\n"
+
+
+def render_event_log(cluster: "Cluster", since: float = 0.0) -> str:
+    """Human-readable cluster event log (leader elections, failures,
+    recoveries, evictions) — the debugging/latency-breakdown feed."""
+    out = []
+    for t, kind, detail in cluster.collector.events:
+        if t >= since:
+            out.append(f"{t:12.4f}s  {kind:<24} {detail}")
+    return "\n".join(out) + ("\n" if out else "")

@@ -1,0 +1,148 @@
+"""Persistent state store (the "Redis in AOF mode" of the paper, §4).
+
+Two implementations behind one interface:
+
+  * ``SimStore`` — used inside the discrete-event simulation. Writes pay a
+    serialized fsync latency plus synchronous replication to standbys; this is
+    exactly the cost Dirigent keeps OFF the invocation critical path and the
+    C3 ablation puts back on it.
+  * ``FileStore`` — a real append-only file store (length-prefixed records,
+    replay-on-open) used by unit tests to validate the recovery semantics on
+    an actual medium.
+
+Keys are namespaced: ``function/<name>``, ``dataplane/<id>``, ``worker/<id>``.
+A write with ``value=None`` is a tombstone (delete).
+"""
+from __future__ import annotations
+
+import os
+import struct
+from typing import Dict, Generator, Optional
+
+from repro.simcore import Environment, Resource
+
+
+class SimStore:
+    """Replicated, strongly-consistent KV store with modeled write latency."""
+
+    def __init__(self, env: Environment, fsync_latency: float,
+                 replication_latency: float, read_latency: float,
+                 n_replicas: int = 3, fsync_sigma: float = 0.4,
+                 stall_prob: float = 0.002, stall: float = 0.120):
+        self.env = env
+        self.fsync_latency = fsync_latency
+        self.replication_latency = replication_latency
+        self.read_latency = read_latency
+        self.fsync_sigma = fsync_sigma
+        self.stall_prob = stall_prob
+        self.stall = stall
+        self.n_replicas = n_replicas
+        self.data: Dict[str, bytes] = {}
+        # The WAL is serialized: one fsync at a time (the contended resource).
+        self._wal = env.resource(capacity=1)
+        self._rng = env.rng("persist")
+        self.write_count = 0
+        self.read_count = 0
+
+    def write(self, key: str, value: Optional[bytes]) -> Generator:
+        """Process-style write: ``yield from store.write(k, v)``."""
+        yield self._wal.acquire()
+        try:
+            # real AOF fsync: lognormal latency + rare rewrite/compaction
+            # stalls that hold the WAL (the p99-surge mechanism, C3)
+            dt = self._rng.lognormal(self.fsync_latency, self.fsync_sigma)
+            if self._rng.random() < self.stall_prob:
+                dt += self.stall * (0.5 + self._rng.random())
+            yield self.env.timeout(dt)
+            if self.n_replicas > 1:
+                yield self.env.timeout(self.replication_latency)
+            if value is None:
+                self.data.pop(key, None)
+            else:
+                self.data[key] = value
+            self.write_count += 1
+        finally:
+            self._wal.release()
+
+    def read(self, key: str) -> Generator:
+        yield self.env.timeout(self.read_latency)
+        self.read_count += 1
+        return self.data.get(key)
+
+    def read_prefix(self, prefix: str) -> Generator:
+        yield self.env.timeout(self.read_latency)
+        self.read_count += 1
+        return {k: v for k, v in self.data.items() if k.startswith(prefix)}
+
+    # Synchronous views for assertions/tests (no cost):
+    def peek(self, key: str) -> Optional[bytes]:
+        return self.data.get(key)
+
+    def peek_prefix(self, prefix: str) -> Dict[str, bytes]:
+        return {k: v for k, v in self.data.items() if k.startswith(prefix)}
+
+
+_REC_HDR = struct.Struct("<IHI")  # crc32, keylen, vallen (0xFFFFFFFF = tombstone)
+_TOMBSTONE = 0xFFFFFFFF
+
+
+class FileStore:
+    """Append-only file-backed store with replay-on-open recovery."""
+
+    def __init__(self, path: str, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        self.data: Dict[str, bytes] = {}
+        self._fh = None
+        if os.path.exists(path):
+            self._replay()
+        self._fh = open(path, "ab")
+
+    def _replay(self) -> None:
+        import zlib
+        with open(self.path, "rb") as fh:
+            buf = fh.read()
+        off = 0
+        while off + _REC_HDR.size <= len(buf):
+            crc, klen, vlen = _REC_HDR.unpack_from(buf, off)
+            off += _REC_HDR.size
+            real_vlen = 0 if vlen == _TOMBSTONE else vlen
+            if off + klen + real_vlen > len(buf):
+                break  # torn tail write: discard
+            key = buf[off:off + klen]
+            val = buf[off + klen:off + klen + real_vlen]
+            body = buf[off:off + klen + real_vlen]
+            off += klen + real_vlen
+            if zlib.crc32(body) != crc:
+                break  # corrupt tail: discard rest
+            if vlen == _TOMBSTONE:
+                self.data.pop(key.decode(), None)
+            else:
+                self.data[key.decode()] = val
+
+    def write(self, key: str, value: Optional[bytes]) -> None:
+        import zlib
+        kb = key.encode()
+        vb = b"" if value is None else value
+        vlen = _TOMBSTONE if value is None else len(vb)
+        body = kb + vb
+        rec = _REC_HDR.pack(zlib.crc32(body), len(kb), vlen) + body
+        self._fh.write(rec)
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+        if value is None:
+            self.data.pop(key, None)
+        else:
+            self.data[key] = value
+
+    def read(self, key: str) -> Optional[bytes]:
+        return self.data.get(key)
+
+    def read_prefix(self, prefix: str) -> Dict[str, bytes]:
+        return {k: v for k, v in self.data.items() if k.startswith(prefix)}
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+            self._fh = None

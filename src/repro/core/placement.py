@@ -1,0 +1,81 @@
+"""Sandbox placement policy (kube-scheduler default semantics, paper §4).
+
+"The placement policy favors nodes with the least utilized resources while
+aiming to balance resource utilization across CPU and memory" — i.e. K8s
+LeastAllocated scoring combined with the balanced-allocation tiebreak.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class NodeAllocation:
+    cpu_capacity: int
+    mem_capacity: int
+    cpu_used: int = 0
+    mem_used: int = 0
+    schedulable: bool = True
+
+    def fits(self, cpu: int, mem: int) -> bool:
+        return (self.schedulable
+                and self.cpu_used + cpu <= self.cpu_capacity
+                and self.mem_used + mem <= self.mem_capacity)
+
+    def score(self, cpu: int, mem: int) -> float:
+        """Higher is better: least-allocated, balanced across CPU and mem."""
+        cpu_frac = (self.cpu_used + cpu) / self.cpu_capacity
+        mem_frac = (self.mem_used + mem) / self.mem_capacity
+        least_allocated = 1.0 - (cpu_frac + mem_frac) / 2.0
+        balance = 1.0 - abs(cpu_frac - mem_frac)
+        return 0.75 * least_allocated + 0.25 * balance
+
+
+class Placer:
+    """Tracks per-node allocation; picks the best node for a new sandbox.
+
+    ``policy`` selects the scoring function (core/policies.py): "balanced"
+    (kube default, used by all benchmarks), "hermod_packing", "random".
+    """
+
+    def __init__(self, policy: str = "balanced"):
+        from repro.core.policies import PLACEMENT_POLICIES
+        self.nodes: Dict[int, NodeAllocation] = {}
+        self.policy = policy
+        self._score = PLACEMENT_POLICIES[policy]
+
+    def add_node(self, worker_id: int, cpu_capacity: int, mem_capacity: int) -> None:
+        self.nodes[worker_id] = NodeAllocation(cpu_capacity, mem_capacity)
+
+    def remove_node(self, worker_id: int) -> None:
+        self.nodes.pop(worker_id, None)
+
+    def set_schedulable(self, worker_id: int, ok: bool) -> None:
+        if worker_id in self.nodes:
+            self.nodes[worker_id].schedulable = ok
+
+    def place(self, cpu: int, mem: int) -> Optional[int]:
+        best_id, best_score = None, float("-inf")
+        for wid in sorted(self.nodes):
+            node = self.nodes[wid]
+            if not node.fits(cpu, mem):
+                continue
+            s = self._score(node, cpu, mem)
+            if s > best_score:
+                best_id, best_score = wid, s
+        if best_id is not None:
+            self.commit(best_id, cpu, mem)
+        return best_id
+
+    def commit(self, worker_id: int, cpu: int, mem: int) -> None:
+        node = self.nodes[worker_id]
+        node.cpu_used += cpu
+        node.mem_used += mem
+
+    def release(self, worker_id: int, cpu: int, mem: int) -> None:
+        node = self.nodes.get(worker_id)
+        if node is None:
+            return
+        node.cpu_used = max(0, node.cpu_used - cpu)
+        node.mem_used = max(0, node.mem_used - mem)

@@ -1,0 +1,47 @@
+"""Invocation records and latency bookkeeping."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class InvocationMode(enum.Enum):
+    SYNC = "sync"
+    ASYNC = "async"
+
+
+@dataclass
+class Invocation:
+    inv_id: int
+    function_name: str
+    arrival: float                 # submit time (client -> front-end LB)
+    exec_time: float               # modeled service time on a dedicated node
+    mode: InvocationMode = InvocationMode.SYNC
+    # live-mode payload: a real callable executed on the worker (examples/)
+    payload: Optional[Callable[[], object]] = None
+
+    # -- timestamps (filled as the request traverses the system) -----------
+    t_dp_arrival: float = -1.0
+    t_queued: float = -1.0
+    t_dispatch: float = -1.0       # DP picked a sandbox & sent to worker
+    t_exec_start: float = -1.0
+    t_done: float = -1.0
+    cold: bool = False             # waited for a sandbox creation
+    failed: bool = False
+    failure_reason: str = ""
+    retries: int = 0
+    result: object = None
+
+    @property
+    def e2e_latency(self) -> float:
+        return self.t_done - self.arrival
+
+    @property
+    def scheduling_latency(self) -> float:
+        """End-to-end latency minus pure execution time (paper §5.3)."""
+        return self.e2e_latency - self.exec_time
+
+    @property
+    def slowdown(self) -> float:
+        return self.e2e_latency / max(self.exec_time, 1e-9)

@@ -1,0 +1,173 @@
+"""Worker-node daemon model (paper §4 "Worker node software stack").
+
+Implements the sandbox lifecycle with the two runtimes the paper evaluates:
+
+  * ``containerd``  — lognormal creation latency; a per-node *kernel lock*
+    resource serializes part of each creation (Linux net-stack/iptables
+    contention — this is what caps the cluster at ~1750 creations/s, C2);
+  * ``firecracker`` — microVM snapshot restore, 40 ms median, much smaller
+    kernel-serialized section (the control plane becomes the bottleneck, C1).
+
+Each node keeps a pool of pre-created recyclable network configurations
+(paper §4): creations take a config from the pool (cheap) or pay the full
+Linux network-stack cost when the pool is empty; a background process
+recycles configs released by teardowns.
+
+The daemon is distinct from the sandboxes: ``fail_daemon()`` stops heartbeats
+and the control API while sandboxes keep serving (paper §5.4 "worker daemon
+failure"); ``fail_node()`` additionally kills every sandbox.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Generator, Optional
+
+from repro.core.abstractions import Sandbox, SandboxState, WorkerNodeInfo
+from repro.core.costmodel import DirigentCosts
+from repro.simcore import Environment, Interrupt, Store
+
+
+@dataclass
+class SandboxRuntime:
+    """A sandbox running on this node."""
+
+    sandbox: Sandbox
+    ready: bool = False
+    # execution bookkeeping (the DP owns slot accounting; this is ground truth
+    # used to fail in-flight requests on node death)
+    executing: int = 0
+
+
+class WorkerDaemon:
+    def __init__(self, env: Environment, info: WorkerNodeInfo,
+                 costs: DirigentCosts, runtime: str = "firecracker",
+                 create_hook: Optional[Callable] = None):
+        self.env = env
+        self.info = info
+        self.costs = costs
+        self.runtime = runtime
+        self.sandboxes: Dict[int, SandboxRuntime] = {}
+        self.daemon_alive = True
+        self.node_alive = True
+        self.create_hook = create_hook  # live-mode: build the real replica
+        self._kernel_lock = env.resource(capacity=1)
+        self._netcfg_pool = env.store()
+        self._netcfg_outstanding = costs.netcfg_pool_size
+        for _ in range(costs.netcfg_pool_size):
+            self._netcfg_pool.put(object())
+        self._rng = env.rng(f"worker-{info.worker_id}")
+        self.creations = 0
+        self.slow_factor = 1.0     # straggler injection (tests/benchmarks)
+        env.process(self._netcfg_replenisher(), name=f"netcfg-{info.worker_id}")
+
+    def _netcfg_replenisher(self) -> Generator:
+        """Background pre-creation keeps the recyclable config pool topped up
+        (paper §4: pools of pre-created network configurations)."""
+        while True:
+            yield self.env.timeout(self.costs.netcfg_replenish_period)
+            if self.node_alive and len(self._netcfg_pool) < self.costs.netcfg_pool_size:
+                self._netcfg_pool.put(object())
+
+    # -- sandbox lifecycle --------------------------------------------------
+    def create_sandbox(self, sandbox: Sandbox) -> Generator:
+        """Create + boot a sandbox; returns when it passes health probes."""
+        if not (self.daemon_alive and self.node_alive):
+            raise RuntimeError("worker daemon unavailable")
+        c = self.costs
+        rt = SandboxRuntime(sandbox=sandbox)
+        self.sandboxes[sandbox.sandbox_id] = rt
+
+        # 1) network configuration: pooled fast path vs full net-stack cost.
+        if len(self._netcfg_pool):
+            yield self._netcfg_pool.get()
+            yield self.env.timeout(c.netcfg_pooled)
+        else:
+            yield self.env.timeout(c.netcfg_fresh)
+
+        # 2) serialized kernel section (cgroups/netns/iptables updates).
+        lock_hold = (c.containerd_kernel_lock if self.runtime == "containerd"
+                     else c.firecracker_kernel_lock)
+        yield self._kernel_lock.acquire()
+        try:
+            yield self.env.timeout(lock_hold)
+        finally:
+            self._kernel_lock.release()
+
+        # 3) parallel portion of the boot (image start / snapshot load).
+        if self.runtime == "containerd":
+            boot = self._rng.lognormal(c.containerd_create_median
+                                       - lock_hold, c.containerd_create_sigma)
+        else:
+            boot = self._rng.lognormal(c.firecracker_create_median
+                                       - lock_hold, c.firecracker_create_sigma)
+        yield self.env.timeout(max(boot, 1e-4))
+
+        if self.create_hook is not None:
+            self.create_hook(sandbox)
+
+        # 4) health probe: daemon polls every probe period; first probe after
+        #    boot completion passes.
+        yield self.env.timeout(self._rng.uniform(0, c.health_probe_period))
+
+        if not (self.daemon_alive and self.node_alive):
+            raise RuntimeError("worker died during sandbox creation")
+        rt.ready = True
+        sandbox.state = SandboxState.READY
+        self.creations += 1
+        return sandbox
+
+    def kill_sandbox(self, sandbox_id: int) -> Generator:
+        """Teardown: dismantle fs, netns, cgroups; recycle the net config."""
+        rt = self.sandboxes.pop(sandbox_id, None)
+        if rt is None:
+            return
+        yield self.env.timeout(self.costs.sandbox_teardown)
+        # recycle the network config back into the pool after a delay
+        def recycle(env):
+            yield env.timeout(self.costs.netcfg_recycle)
+            self._netcfg_pool.put(object())
+        self.env.process(recycle(self.env), name="netcfg-recycle")
+
+    def list_sandboxes(self) -> list[Sandbox]:
+        """Recovery API: CP reconstructs sandbox state from here (§3.4.1)."""
+        return [rt.sandbox for rt in self.sandboxes.values() if rt.ready]
+
+    # -- request execution -----------------------------------------------------
+    def execute(self, sandbox_id: int, exec_time: float,
+                payload: Optional[Callable] = None) -> Generator:
+        """Execute one invocation inside a sandbox."""
+        rt = self.sandboxes.get(sandbox_id)
+        if rt is None or not rt.ready or not self.node_alive:
+            raise RuntimeError("sandbox gone")
+        c = self.costs
+        rt.executing += 1
+        try:
+            yield self.env.timeout(c.worker_nat_hop + c.exec_slot_overhead)
+            if payload is not None:
+                # live mode: run real work; bill its wall time to the clock
+                import time
+                t0 = time.perf_counter()
+                result = payload()
+                yield self.env.timeout(time.perf_counter() - t0)
+            else:
+                result = None
+                yield self.env.timeout(exec_time * self.slow_factor)
+            if not self.node_alive:
+                raise RuntimeError("node failed during execution")
+            return result
+        finally:
+            rt.executing -= 1
+
+    # -- failure injection --------------------------------------------------------
+    def fail_daemon(self) -> None:
+        self.daemon_alive = False
+
+    def recover_daemon(self) -> None:
+        self.daemon_alive = True
+
+    def fail_node(self) -> None:
+        self.daemon_alive = False
+        self.node_alive = False
+        for rt in self.sandboxes.values():
+            rt.ready = False
+        self.sandboxes.clear()

@@ -1,0 +1,163 @@
+"""Chunk-parallel (matmul-form) implementations of the recurrences.
+
+These are the compute-efficient forms the models use for training/prefill:
+within a chunk of length C the recurrence is evaluated as dense matmuls
+(MXU-friendly), with an exact state carry between chunks — mathematically
+identical to the token-by-token recurrence (kernel tests assert allclose
+against ref.py).
+
+Derivation (WKV6; cum_i = sum_{l<i} log w_l, so cum_0 = 0):
+    intra:  y_i += sum_{j<i} (r_i . (k_j * exp(cum_i - cum_{j+1}))) v_j
+    bonus:  y_i += (r_i . (u * k_i)) v_i
+    inter:  y_i += (r_i * exp(cum_i)) @ S_prev
+    state:  S_new = diag(exp(cum_C)) S_prev
+                  + sum_j (k_j * exp(cum_C - cum_{j+1}))^T v_j
+
+Numerical-stability contract: |log w| * chunk_len must stay well under the
+fp32 exp overflow (~88). The models clamp log w to [-0.5, -1e-4] and use
+chunk_len <= 128, giving a worst-case exponent of 64 — safe in fp32.
+The SSD decay is scalar-per-head with the same structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _split_chunks(x, C):
+    B, S = x.shape[0], x.shape[1]
+    n = S // C
+    return x.reshape((B, n, C) + x.shape[2:])
+
+
+@partial(jax.jit, static_argnames=("chunk", "unroll"))
+def wkv6_chunked(r, k, v, w, u, initial_state=None, chunk: int = 64,
+                 unroll: bool = False):
+    """Same signature/semantics as ref.wkv6_ref. S must be divisible by chunk."""
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    S0 = (jnp.zeros((B, H, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    rc = _split_chunks(r, chunk)      # (B, n, C, H, dk)
+    kc = _split_chunks(k, chunk)
+    vc = _split_chunks(v, chunk)
+    wc = _split_chunks(w, chunk)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)   # strict lower (j<i)
+
+    def chunk_step(S_prev, inputs):
+        rr, kk, vv, ww = inputs           # (B, C, H, dk|dv)
+        logw = jnp.log(ww)                # (B, C, H, dk)
+        cum = jnp.cumsum(logw, axis=1)    # cum_{i+1} = sum_{l<=i}
+        cum_in = cum - logw               # cum_i   = sum_{l<i}
+        cum_last = cum[:, -1:, :, :]      # cum_C
+
+        q_dec = rr * jnp.exp(cum_in)                     # r_i * exp(cum_i)
+        k_dec = kk * jnp.exp(-cum)                       # k_j * exp(-cum_{j+1})
+        k_rem = kk * jnp.exp(cum_last - cum)             # for the state update
+
+        # intra-chunk: scores_ij = q_dec_i . k_dec_j  (== r.k * exp(cum_i - cum_{j+1}))
+        scores = jnp.einsum("bihk,bjhk->bhij", q_dec, k_dec)
+        scores = scores * mask[None, None]
+        bonus = jnp.einsum("bihk,bihk->bhi", rr, u[None, None] * kk)
+        scores = scores + jnp.zeros_like(scores).at[
+            ..., jnp.arange(chunk), jnp.arange(chunk)].add(bonus)
+        y = jnp.einsum("bhij,bjhv->bihv", scores, vv)
+        # inter-chunk
+        y = y + jnp.einsum("bihk,bhkv->bihv", q_dec, S_prev)
+        # state carry
+        S_new = jnp.exp(cum_last)[:, 0, :, :, None] * S_prev \
+            + jnp.einsum("bjhk,bjhv->bhkv", k_rem, vv)
+        return S_new, y
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), wc.transpose(1, 0, 2, 3, 4))
+    S_fin, ys = lax.scan(chunk_step, S0, xs, unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+    return y, S_fin
+
+
+def wkv6_decode(r, k, v, w, u, state):
+    """Single-token step: r,k,v,w: (B,1,H,d); state: (B,H,dk,dv)."""
+    f32 = jnp.float32
+    rt = r[:, 0].astype(f32)
+    kt = k[:, 0].astype(f32)
+    vt = v[:, 0].astype(f32)
+    wt = w[:, 0].astype(f32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rt,
+                   state.astype(f32) + u.astype(f32)[None, :, :, None] * kv)
+    S_new = wt[..., :, None] * state.astype(f32) + kv
+    return y[:, None], S_new
+
+
+@partial(jax.jit, static_argnames=("chunk", "unroll"))
+def ssd_chunked(x, dt, A, B, C, D, initial_state=None, chunk: int = 64,
+                unroll: bool = False):
+    """Mamba-2 SSD, chunked matmul form. Same semantics as ref.ssd_ref."""
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    A = A.astype(f32)
+    D = D.astype(f32)
+    h0 = (jnp.zeros((b, H, Pd, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    xc = _split_chunks(x, chunk)         # (b, n, C, H, P)
+    dtc = _split_chunks(dt, chunk)       # (b, n, C, H)
+    Bc = _split_chunks(B, chunk)
+    Cc = _split_chunks(C, chunk)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), f32))        # j <= i (post-update)
+
+    def chunk_step(h_prev, inputs):
+        xx, dd, BB, CC = inputs          # (b,C,H,P), (b,C,H), (b,C,H,N) x2
+        la = dd * A[None, None, :]       # log a_t  (b,C,H)
+        cum = jnp.cumsum(la, axis=1)     # cum_{i} = sum_{l<=i} log a_l
+        cum_last = cum[:, -1:, :]
+
+        xdt = xx * dd[..., None]         # dt_j x_j
+        # intra: y_i = sum_{j<=i} exp(cum_i - cum_j) (C_i . B_j) (dt_j x_j)
+        decay = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :],
+                                 -60.0, 0.0))             # (b,i,j,H)
+        scores = jnp.einsum("bihn,bjhn->bijh", CC, BB) * decay \
+            * mask[None, :, :, None]
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xdt)
+        # inter: exp(cum_i) C_i . h_prev
+        q_dec = CC * jnp.exp(cum)[..., None]
+        y = y + jnp.einsum("bihn,bhpn->bihp", q_dec, h_prev)
+        y = y + D[None, None, :, None] * xx
+        # state carry: h_new = exp(cum_C) h_prev + sum_j exp(cum_C - cum_j) (dt_j x_j) B_j^T
+        k_rem = BB * jnp.exp(cum_last - cum)[..., None]
+        h_new = jnp.exp(cum_last)[:, 0, :, None, None] * h_prev \
+            + jnp.einsum("bjhp,bjhn->bhpn", xdt, k_rem)
+        return h_new, y
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4))
+    h_fin, ys = lax.scan(chunk_step, h0, xs, unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, Pd)
+    return y, h_fin
+
+
+def ssd_decode(x, dt, A, B, C, D, state):
+    """Single-token SSD step. x: (b,1,H,P); state: (b,H,P,N)."""
+    f32 = jnp.float32
+    xt, dtt = x[:, 0].astype(f32), dt[:, 0].astype(f32)
+    Bt, Ct = B[:, 0].astype(f32), C[:, 0].astype(f32)
+    a = jnp.exp(dtt * A.astype(f32)[None, :])
+    upd = (dtt[..., None] * xt)[..., :, None] * Bt[..., None, :]
+    h_new = a[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ct) \
+        + D.astype(f32)[None, :, None] * xt
+    return y[:, None], h_new

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash-decode — one query token vs a long KV cache.
+
+Grid: (batch, q_heads, n_kv_blocks); the kv dimension is innermost and
+carries running (m, l, acc) in VMEM scratch — the classic split-KV decode
+kernel, with the cache-length mask applied per block. The GQA index map
+reads each KV block once per query head group without materializing
+repeated KV (the cache stays at Hkv width in HBM; blocks stream into VMEM).
+
+For v5e: pick block_kv as a multiple of 128; the (1, d) query row is small —
+the kernel is memory-bound by design (one cache pass), which is exactly the
+regime the roofline analysis shows for decode shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_kv: int, n_kv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    # skip blocks entirely beyond the cache length
+    @pl.when(ik * block_kv < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (1,bkv)
+        kpos = ik * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        s = jnp.where(kpos < cache_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                            block_kv: int = 512, interpret: bool = False):
+    """q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D); cache_len: () int32."""
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    block_kv = min(block_kv, smax)
+    assert smax % block_kv == 0
+    n_kv = smax // block_kv
+    scale = 1.0 / math.sqrt(d)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, Smax, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    lens = jnp.broadcast_to(jnp.reshape(cache_len, (1,)), (1,)).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_kv=block_kv, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h, ik: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h, ik: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h, ik: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h, ik: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

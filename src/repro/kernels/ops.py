@@ -1,0 +1,91 @@
+"""Public kernel entry points with implementation dispatch.
+
+``impl``:
+  * "jnp"              — blocked/chunked pure-jnp forms (portable; used by the
+                         dry-run HLO and CPU execution);
+  * "pallas"           — Pallas TPU kernels (deployment target);
+  * "pallas_interpret" — Pallas kernels executed by the interpreter (CPU
+                         correctness testing of the TPU kernel bodies);
+  * "reference"        — naive oracles from ref.py (tests only).
+  * "auto"             — pallas on TPU backends, jnp elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import chunked, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_chunk import wkv6_pallas
+from repro.kernels.ssd_chunk import ssd_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def flash_attention(q, k, v, causal=True, q_chunk=512, kv_chunk=1024,
+                    q_offset=0, impl="auto", unroll=False):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        from repro.models.layers import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, causal=causal, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, q_offset=q_offset,
+                                   unroll=unroll)
+    if impl in ("pallas", "pallas_interpret"):
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      block_q=min(q_chunk, 128),
+                                      block_kv=min(kv_chunk, 128),
+                                      q_offset=q_offset,
+                                      interpret=(impl == "pallas_interpret"))
+    if impl == "reference":
+        from repro.models.layers import repeat_kv
+        g = q.shape[2] // k.shape[2]
+        return ref.flash_attention_ref(q, repeat_kv(k, g), repeat_kv(v, g),
+                                       causal=causal, q_offset=q_offset)
+    raise ValueError(impl)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, impl="auto",
+                     block_kv=512):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        from repro.models.layers import decode_attention_jnp
+        return decode_attention_jnp(q, k_cache, v_cache, cache_len)
+    if impl in ("pallas", "pallas_interpret"):
+        return decode_attention_pallas(
+            q, k_cache, v_cache, cache_len, block_kv=block_kv,
+            interpret=(impl == "pallas_interpret"))
+    if impl == "reference":
+        return ref.decode_attention_ref(q, k_cache, v_cache, cache_len)
+    raise ValueError(impl)
+
+
+def wkv6(r, k, v, w, u, initial_state=None, chunk=64, impl="auto",
+         unroll=False):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return chunked.wkv6_chunked(r, k, v, w, u, initial_state, chunk=chunk,
+                                    unroll=unroll)
+    if impl in ("pallas", "pallas_interpret"):
+        return wkv6_pallas(r, k, v, w, u, initial_state, chunk=chunk,
+                           interpret=(impl == "pallas_interpret"))
+    if impl == "reference":
+        return ref.wkv6_ref(r, k, v, w, u, initial_state)
+    raise ValueError(impl)
+
+
+def ssd(x, dt, A, B, C, D, initial_state=None, chunk=64, impl="auto",
+        unroll=False):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return chunked.ssd_chunked(x, dt, A, B, C, D, initial_state,
+                                   chunk=chunk, unroll=unroll)
+    if impl in ("pallas", "pallas_interpret"):
+        return ssd_pallas(x, dt, A, B, C, D, initial_state, chunk=chunk,
+                          interpret=(impl == "pallas_interpret"))
+    if impl == "reference":
+        return ref.ssd_ref(x, dt, A, B, C, D, initial_state)
+    raise ValueError(impl)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantic ground truth: naive recurrences / O(S^2) attention,
+written for clarity not speed. Kernel tests assert the Pallas kernels and the
+chunked jnp forms match these to float tolerance across shape/dtype sweeps.
+
+Shapes follow the (B, S, H, D) convention used by the models.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# -- attention oracles (delegate to models.layers, the single source) --------
+
+def flash_attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    from repro.models.layers import attention_reference
+    return attention_reference(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    from repro.models.layers import decode_attention_jnp
+    return decode_attention_jnp(q, k_cache, v_cache, cache_len)
+
+
+# -- RWKV6 (Finch) WKV recurrence ---------------------------------------------
+#
+# Per head, with r_t, k_t, w_t in R^dk, v_t in R^dv, bonus u in R^dk and
+# state S in R^{dk x dv}:
+#     y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)        (readout + bonus)
+#     S_t = diag(w_t) S_{t-1} + k_t v_t^T              (data-dependent decay)
+
+def wkv6_ref(r, k, v, w, u, initial_state=None):
+    """r,k,w: (B,S,H,dk); v: (B,S,H,dv); u: (H,dk);
+    initial_state: (B,H,dk,dv) or None. Returns (y, final_state)."""
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    S0 = (jnp.zeros((B, H, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs           # (B,H,dk) / (B,H,dv)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, y
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    S_fin, ys = lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S_fin     # (B,S,H,dv), (B,H,dk,dv)
+
+
+# -- Mamba-2 SSD recurrence ------------------------------------------------------
+#
+# Per head, scalar decay a_t = exp(dt_t * A) (A < 0), input x_t in R^P,
+# B_t, C_t in R^N, state h in R^{P x N}:
+#     h_t = a_t h_{t-1} + (dt_t x_t) B_t^T
+#     y_t = h_t C_t + D x_t
+
+def ssd_ref(x, dt, A, B, C, D, initial_state=None):
+    """x: (b,S,H,P); dt: (b,S,H); A: (H,); B,C: (b,S,H,N); D: (H,).
+    Returns (y, final_state (b,H,P,N))."""
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    A = A.astype(f32)
+    D = D.astype(f32)
+    h0 = (jnp.zeros((b, H, Pd, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h, inputs):
+        xt, dtt, Bt, Ct = inputs          # (b,H,P), (b,H), (b,H,N), (b,H,N)
+        a = jnp.exp(dtt * A[None, :])     # (b,H)
+        upd = (dtt[..., None] * xt)[..., :, None] * Bt[..., None, :]
+        h_new = a[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, Ct) + D[None, :, None] * xt
+        return h_new, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    h_fin, ys = lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h_fin

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: chunk-parallel Mamba-2 SSD scan (zamba2 mixer).
+
+Grid: (batch, ssm_heads, n_chunks), chunk innermost; the (P x N) state lives
+in VMEM scratch across chunks. Scalar-per-head decay makes the within-chunk
+form a masked (C x C) matmul (``scores = (C B^T) * decay``) plus two (C x P/N)
+GEMMs — MXU-shaped when C, P, N are multiples of the native tile.
+Semantics == ref.ssd_ref (kernel tests sweep shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hout_ref, state_scr, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (C, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (C, 1)
+    A = a_ref[0]                                  # scalar decay coef
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (C, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (C, N)
+    D = d_ref[0]                                  # scalar
+
+    la = dt[:, 0] * A                            # (C,) log decay
+    cum = jnp.cumsum(la)                         # cum_i (inclusive)
+    cum_last = cum[-1]
+
+    xdt = x * dt                                  # (C, P)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.clip(cum[:, None] - cum[None, :], -60.0, 0.0))
+    scores = jnp.where(jj <= ii, scores * decay, 0.0)
+
+    h_prev = state_scr[...]                      # (P, N)
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())))   # (C, P)
+    q_dec = Cm * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(q_dec, h_prev, (((1,), (1,)), ((), ())))
+    y = y + D * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    k_rem = Bm * jnp.exp(cum_last - cum)[:, None]
+    h_new = (jnp.exp(cum_last) * h_prev
+             + jax.lax.dot_general(xdt, k_rem, (((0,), (0,)), ((), ()))))
+    state_scr[...] = h_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A, B, C, D, initial_state=None, chunk: int = 64,
+               interpret: bool = False):
+    """Same semantics as ref.ssd_ref. x: (b,S,H,P); dt: (b,S,H);
+    A,D: (H,); B,C: (b,S,H,N)."""
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, Pd, N), jnp.float32)
+
+    xt = x.transpose(0, 2, 1, 3)                 # (b, H, S, P)
+    dtt = dt.transpose(0, 2, 1)[..., None]       # (b, H, S, 1)
+    Bt = B.transpose(0, 2, 1, 3)
+    Ct = C.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(b, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Pd), lambda b_, h, ic: (b_, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h, ic: (b_, h, ic, 0)),
+            pl.BlockSpec((1,), lambda b_, h, ic: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h, ic: (b_, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h, ic: (b_, h, ic, 0)),
+            pl.BlockSpec((1,), lambda b_, h, ic: (h,)),
+            pl.BlockSpec((1, 1, Pd, N), lambda b_, h, ic: (b_, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, Pd), lambda b_, h, ic: (b_, h, ic, 0)),
+            pl.BlockSpec((1, 1, Pd, N), lambda b_, h, ic: (b_, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, H, S, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((b, H, Pd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, Bt, Ct, D, initial_state)
+    return y.transpose(0, 2, 1, 3), h_fin

@@ -1,0 +1,49 @@
+"""Optimized-HLO collective parsing (shared by dryrun + tests).
+
+Import-safe: no jax imports, no environment side effects.
+"""
+import re
+
+
+def parse_collectives(hlo_text: str) -> list:
+    """Extract (op_kind, output_bytes, group_size) for every collective in
+    the optimized HLO. Bytes = sum of the op's result buffer sizes."""
+    dtype_bytes = {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+        "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+    out = []
+    op_re = re.compile(
+        r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start)?\(")
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    group_re = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+    group_re2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m:
+            continue
+        result_ty, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(result_ty):
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * dtype_bytes[dt]
+        gsize = None
+        gm = group_re.search(line)
+        if gm:
+            gsize = len([x for x in gm.group(1).split(",") if x.strip()])
+        else:
+            gm2 = group_re2.search(line)
+            if gm2:
+                gsize = int(gm2.group(2))
+        out.append({"kind": kind, "bytes": nbytes, "group": gsize})
+    return out
+
+

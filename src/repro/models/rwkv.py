@@ -1,0 +1,302 @@
+"""RWKV6 (Finch) — attention-free LM with data-dependent per-channel decay.
+
+Faithful-core implementation: token-shift mixing, time-mix block with the
+WKV6 recurrence (chunk-parallel for train/prefill, O(1)-state for decode),
+squared-ReLU channel-mix. The dynamic decay LoRA is included; the per-token
+log-decay is clamped to [-0.5, -1e-4] (see kernels/chunked.py stability
+contract).
+
+State for decode: per layer (wkv state (B,H,dk,dv), shift_att (B,D),
+shift_ffn (B,D)) — O(1) in context length, which is why rwkv6 runs the
+``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models.api import RunConfig
+from repro.models.sharding import constrain
+from repro.kernels.chunked import wkv6_chunked, wkv6_decode
+
+LORA_R = 64
+LOGW_MIN, LOGW_MAX = -0.5, -1e-4
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ArchConfig, run_cfg: RunConfig):
+        self.cfg = cfg
+        self.run = run_cfg
+        assert cfg.d_model % cfg.n_heads == 0
+        self.head_dim = cfg.d_model // cfg.n_heads
+
+    # ------------------------------------------------------------------ params
+    def _layer_shapes(self):
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        dt = _dt(cfg)
+        return {
+            "ln1": ((d,), jnp.float32), "ln1b": ((d,), jnp.float32),
+            "ln2": ((d,), jnp.float32), "ln2b": ((d,), jnp.float32),
+            # time-mix
+            "mu_r": ((d,), jnp.float32), "mu_k": ((d,), jnp.float32),
+            "mu_v": ((d,), jnp.float32), "mu_g": ((d,), jnp.float32),
+            "mu_w": ((d,), jnp.float32),
+            "w_r": ((d, d), dt), "w_k": ((d, d), dt), "w_v": ((d, d), dt),
+            "w_g": ((d, d), dt), "w_o": ((d, d), dt),
+            "decay_base": ((d,), jnp.float32),
+            "decay_A": ((d, LORA_R), dt), "decay_B": ((LORA_R, d), dt),
+            "bonus_u": ((cfg.n_heads, self.head_dim), jnp.float32),
+            "gn": ((d,), jnp.float32), "gnb": ((d,), jnp.float32),
+            # channel-mix
+            "mu_ck": ((d,), jnp.float32), "mu_cr": ((d,), jnp.float32),
+            "c_k": ((d, f), dt), "c_v": ((f, d), dt), "c_r": ((d, d), dt),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        Lx = cfg.n_layers
+        layers = {k: jax.ShapeDtypeStruct((Lx,) + s, d)
+                  for k, (s, d) in self._layer_shapes().items()}
+        return {
+            "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), _dt(cfg)),
+            "ln_in": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "ln_inb": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "final_normb": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), _dt(cfg)),
+            "layers": layers,
+        }
+
+    def param_pspecs(self):
+        m = self.run.model_axis
+        vec = P(None, None)
+        layers = {}
+        for k, (shape, _) in self._layer_shapes().items():
+            if len(shape) == 1:
+                layers[k] = vec
+            elif k in ("w_r", "w_k", "w_v", "w_g", "c_k", "c_r"):
+                layers[k] = P(None, None, m)     # column-parallel
+            elif k in ("w_o", "c_v"):
+                layers[k] = P(None, m, None)     # row-parallel
+            elif k == "decay_A":
+                layers[k] = P(None, None, None)
+            elif k == "decay_B":
+                layers[k] = P(None, None, m)
+            elif k == "bonus_u":
+                layers[k] = P(None, m, None)
+            else:
+                layers[k] = P(*((None,) * (len(shape) + 1)))
+        return {
+            "embed": P(m, None), "ln_in": P(None), "ln_inb": P(None),
+            "final_norm": P(None), "final_normb": P(None),
+            "lm_head": P(None, m), "layers": layers,
+        }
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        dt = _dt(cfg)
+        Lx = cfg.n_layers
+        layers = {}
+        for i, (k, (shape, d)) in enumerate(self._layer_shapes().items()):
+            key = jax.random.fold_in(rng, i)
+            if k.startswith(("ln", "gn")):
+                layers[k] = (jnp.ones if not k.endswith("b") else jnp.zeros)(
+                    (Lx,) + shape, d)
+            elif k.startswith("mu_"):
+                layers[k] = jnp.full((Lx,) + shape, 0.5, d)
+            elif k == "decay_base":
+                layers[k] = jnp.full((Lx,) + shape, -2.0, d)
+            elif k == "bonus_u":
+                layers[k] = (jax.random.normal(key, (Lx,) + shape) * 0.3
+                             ).astype(d)
+            else:
+                layers[k] = L.dense_init(key, (Lx,) + shape, d)
+        key2 = jax.random.fold_in(rng, 999)
+        return {
+            "embed": L.dense_init(key2, (cfg.vocab, cfg.d_model), dt, scale=0.02),
+            "ln_in": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_inb": jnp.zeros((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "final_normb": jnp.zeros((cfg.d_model,), jnp.float32),
+            "lm_head": L.dense_init(jax.random.fold_in(rng, 1000),
+                                    (cfg.d_model, cfg.vocab), dt),
+            "layers": layers,
+        }
+
+    # ------------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeSpec):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes if shape.global_batch > 1 else None
+        if shape.kind == "train":
+            return {"tokens": P(dax, None), "labels": P(dax, None)}
+        if shape.kind == "prefill":
+            return {"tokens": P(dax, None)}
+        return {"tokens": P(dax, None), "cache_len": P()}
+
+    def cache_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        b = shape.global_batch
+        H, hd = cfg.n_heads, self.head_dim
+        return {
+            "wkv": jax.ShapeDtypeStruct((cfg.n_layers, b, H, hd, hd),
+                                        jnp.float32),
+            "shift_att": jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.d_model),
+                                              jnp.float32),
+            "shift_ffn": jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.d_model),
+                                              jnp.float32),
+        }
+
+    def cache_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes if shape.global_batch > 1 else None
+        m = self.run.model_axis
+        return {"wkv": P(None, dax, m, None, None),
+                "shift_att": P(None, dax, None),
+                "shift_ffn": P(None, dax, None)}
+
+    def init_cache(self, shape: ShapeSpec, batch: Optional[int] = None):
+        specs = self.cache_specs(shape)
+        b = batch or shape.global_batch
+        return {k: jnp.zeros((s.shape[0], b) + s.shape[2:], s.dtype)
+                for k, s in specs.items()}
+
+    # ------------------------------------------------------------------ blocks
+    def _shift(self, x, prev):
+        """Token shift: x_{t-1} with prev feeding position 0."""
+        return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    def _decay(self, w, xw):
+        logw = w["decay_base"][None, None, :] + jnp.tanh(
+            xw.astype(jnp.float32) @ w["decay_A"].astype(jnp.float32)
+        ) @ w["decay_B"].astype(jnp.float32)
+        logw = -jnp.exp(logw)     # strictly negative
+        return jnp.clip(logw, LOGW_MIN, LOGW_MAX)
+
+    def _time_mix(self, w, x, prev_shift, wkv_state, decode: bool):
+        cfg = self.cfg
+        B, S, D = x.shape
+        H, hd = cfg.n_heads, self.head_dim
+        xs = self._shift(x, prev_shift) if not decode else \
+            jnp.broadcast_to(prev_shift[:, None, :], x.shape)
+
+        def mix(mu):
+            return x + (xs - x) * mu[None, None, :]
+
+        dt = _dt(cfg)
+        xr, xk, xv, xg, xw = (mix(w[f"mu_{n}"]).astype(dt)
+                              for n in ("r", "k", "v", "g", "w"))
+        r = (xr @ w["w_r"]).reshape(B, S, H, hd)
+        k = (xk @ w["w_k"]).reshape(B, S, H, hd)
+        v = (xv @ w["w_v"]).reshape(B, S, H, hd)
+        g = jax.nn.silu((xg @ w["w_g"]).astype(jnp.float32))
+        logw = self._decay(w, xw).reshape(B, S, H, hd)
+        decay = jnp.exp(logw)
+        if decode:
+            y, new_state = wkv6_decode(r, k, v, decay, w["bonus_u"], wkv_state)
+        else:
+            y, new_state = wkv6_chunked(r, k, v, decay, w["bonus_u"],
+                                        wkv_state, chunk=self.run.seq_chunk,
+                                        unroll=self.run.layer_mode == "unroll")
+        y = y.reshape(B, S, D)
+        y = L.layer_norm(y, w["gn"], w["gnb"])   # group-norm approximation
+        y = (y * g).astype(dt) @ w["w_o"]
+        return y, new_state, x[:, -1, :].astype(jnp.float32)
+
+    def _channel_mix(self, w, x, prev_shift, decode: bool):
+        dt = _dt(self.cfg)
+        xs = self._shift(x, prev_shift) if not decode else \
+            jnp.broadcast_to(prev_shift[:, None, :], x.shape)
+        xk = (x + (xs - x) * w["mu_ck"][None, None, :]).astype(dt)
+        xr = (x + (xs - x) * w["mu_cr"][None, None, :]).astype(dt)
+        kk = jnp.square(jax.nn.relu(xk @ w["c_k"]))
+        out = kk @ w["c_v"]
+        rr = jax.nn.sigmoid((xr @ w["c_r"]).astype(jnp.float32))
+        return (out.astype(jnp.float32) * rr).astype(x.dtype), \
+            x[:, -1, :].astype(jnp.float32)
+
+    def _block(self, w, x, state, decode: bool):
+        wkv, sh_a, sh_f = state
+        h = L.layer_norm(x, w["ln1"], w["ln1b"])
+        o, wkv_new, sh_a_new = self._time_mix(w, h, sh_a, wkv, decode)
+        x = x + o
+        h = L.layer_norm(x, w["ln2"], w["ln2b"])
+        o, sh_f_new = self._channel_mix(w, h, sh_f, decode)
+        x = x + o
+        x = constrain(x, P(self.run.data_axes, None, None))
+        return x, (wkv_new, sh_a_new, sh_f_new)
+
+    def _stack(self, params, x, cache, decode: bool):
+        cfg = self.cfg
+        B = x.shape[0]
+        layers = params["layers"]
+        if cache is None:
+            H, hd = cfg.n_heads, self.head_dim
+            z = jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32)
+            zs = jnp.zeros((cfg.n_layers, B, cfg.d_model), jnp.float32)
+            cache = {"wkv": z, "shift_att": zs, "shift_ffn": zs}
+        block = self._block
+        if self.run.remat and not decode:
+            block = jax.checkpoint(block, static_argnums=(3,))
+
+        def body(x, wl_state):
+            wl, st = wl_state
+            x, st_new = block(wl, x, st, decode)
+            return x, st_new
+
+        states = (cache["wkv"], cache["shift_att"], cache["shift_ffn"])
+        if self.run.layer_mode == "scan":
+            x, (wkv, sa, sf) = lax.scan(body, x, (layers, states))
+        else:
+            wkvs, sas, sfs = [], [], []
+            for i in range(cfg.n_layers):
+                wl = jax.tree.map(lambda a: a[i], layers)
+                st = jax.tree.map(lambda a: a[i], states)
+                x, (w1, s1, s2) = body(x, (wl, st))
+                wkvs.append(w1); sas.append(s1); sfs.append(s2)
+            wkv, sa, sf = (jnp.stack(t) for t in (wkvs, sas, sfs))
+        return x, {"wkv": wkv, "shift_att": sa, "shift_ffn": sf}
+
+    # ------------------------------------------------------------------ steps
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(_dt(cfg))
+        x = constrain(x, P(self.run.data_axes, None, None))
+        x = L.layer_norm(x, params["ln_in"], params["ln_inb"])
+        x, _ = self._stack(params, x, None, decode=False)
+        x = L.layer_norm(x, params["final_norm"], params["final_normb"])
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    def loss_fn(self, params, batch):
+        logits = self.forward(params, batch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(_dt(cfg))
+        x = L.layer_norm(x, params["ln_in"], params["ln_inb"])
+        x, new_cache = self._stack(params, x, cache, decode=True)
+        x = L.layer_norm(x, params["final_norm"], params["final_normb"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, -1]
+        return logits, new_cache

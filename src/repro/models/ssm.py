@@ -1,0 +1,364 @@
+"""Zamba2 — hybrid Mamba-2 backbone with a *shared* attention block.
+
+Structure (arXiv:2411.15242, simplified): ``n_layers`` Mamba-2 mixer blocks;
+after every ``attn_every`` blocks, one shared full-attention transformer
+block (GQA kv=n_heads here) is applied — the SAME weights at every
+invocation point (the per-invocation LoRA adapters of the real model are
+omitted; noted in DESIGN.md). With n_layers=54 and attn_every=6 there are 9
+invocation points, each with its own KV cache.
+
+The Mamba-2 mixer uses the chunk-parallel SSD form (kernels/chunked.ssd_*).
+State for decode is O(1) in context (conv tail + SSD state); only the shared
+attention block carries a KV cache, which for ``long_500k`` is sharded along
+the *sequence* axis over the ``data`` mesh dimension (sequence-parallel
+cache) since batch=1 cannot use the data axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models.api import RunConfig
+from repro.models.sharding import constrain
+from repro.kernels.chunked import ssd_chunked, ssd_decode
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ArchConfig, run_cfg: RunConfig):
+        self.cfg = cfg
+        self.run = run_cfg
+        s = cfg.ssm
+        assert s is not None
+        self.d_inner = s.expand * cfg.d_model
+        assert self.d_inner % s.head_dim == 0
+        self.n_ssm_heads = self.d_inner // s.head_dim
+        assert cfg.n_layers % s.attn_every == 0
+        self.n_super = cfg.n_layers // s.attn_every
+        self.per_super = s.attn_every
+
+    # ------------------------------------------------------------------ params
+    def _mamba_shapes(self):
+        cfg = self.cfg
+        s = cfg.ssm
+        d, din, N, H = cfg.d_model, self.d_inner, s.d_state, self.n_ssm_heads
+        dt = _dt(cfg)
+        conv_ch = din + 2 * N
+        return {
+            "ln": ((d,), jnp.float32),
+            "in_proj": ((d, 2 * din + 2 * N + H), dt),
+            "conv_w": ((s.conv_width, conv_ch), jnp.float32),
+            "conv_b": ((conv_ch,), jnp.float32),
+            "A_log": ((H,), jnp.float32),
+            "D": ((H,), jnp.float32),
+            "dt_bias": ((H,), jnp.float32),
+            "out_proj": ((din, d), dt),
+        }
+
+    def _shared_shapes(self):
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+        dt = _dt(cfg)
+        return {
+            "ln1": ((d,), jnp.float32),
+            "wq": ((d, hq * hd), dt), "wk": ((d, hkv * hd), dt),
+            "wv": ((d, hkv * hd), dt), "wo": ((hq * hd, d), dt),
+            "ln2": ((d,), jnp.float32),
+            "w_gate": ((d, f), dt), "w_up": ((d, f), dt),
+            "w_down": ((f, d), dt),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        ns, ps = self.n_super, self.per_super
+        mamba = {k: jax.ShapeDtypeStruct((ns, ps) + s, d)
+                 for k, (s, d) in self._mamba_shapes().items()}
+        shared = {k: jax.ShapeDtypeStruct(s, d)
+                  for k, (s, d) in self._shared_shapes().items()}
+        return {
+            "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), _dt(cfg)),
+            "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), _dt(cfg)),
+            "mamba": mamba,
+            "shared": shared,
+        }
+
+    def param_pspecs(self):
+        m = self.run.model_axis
+        mamba = {
+            "ln": P(None, None, None),
+            "in_proj": P(None, None, None, m),
+            "conv_w": P(None, None, None, m),
+            "conv_b": P(None, None, m),
+            "A_log": P(None, None, m), "D": P(None, None, m),
+            "dt_bias": P(None, None, m),
+            "out_proj": P(None, None, m, None),
+        }
+        shared = {
+            "ln1": P(None), "wq": P(None, m), "wk": P(None, m),
+            "wv": P(None, m), "wo": P(m, None), "ln2": P(None),
+            "w_gate": P(None, m), "w_up": P(None, m), "w_down": P(m, None),
+        }
+        return {"embed": P(m, None), "final_norm": P(None),
+                "lm_head": P(None, m), "mamba": mamba, "shared": shared}
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        ns, ps = self.n_super, self.per_super
+        mamba, shared = {}, {}
+        for i, (k, (shape, d)) in enumerate(self._mamba_shapes().items()):
+            key = jax.random.fold_in(rng, i)
+            if k == "ln":
+                mamba[k] = jnp.ones((ns, ps) + shape, d)
+            elif k == "A_log":
+                mamba[k] = jnp.log(jnp.broadcast_to(
+                    jnp.linspace(1.0, 8.0, shape[0]), (ns, ps) + shape)
+                ).astype(d)
+            elif k in ("D", "dt_bias", "conv_b"):
+                mamba[k] = jnp.zeros((ns, ps) + shape, d)
+            elif k == "conv_w":
+                mamba[k] = (jax.random.normal(key, (ns, ps) + shape) * 0.2
+                            ).astype(d)
+            else:
+                mamba[k] = L.dense_init(key, (ns, ps) + shape, d)
+        for i, (k, (shape, d)) in enumerate(self._shared_shapes().items()):
+            key = jax.random.fold_in(rng, 100 + i)
+            shared[k] = (jnp.ones(shape, d) if k.startswith("ln")
+                         else L.dense_init(key, shape, d))
+        return {
+            "embed": L.dense_init(jax.random.fold_in(rng, 998),
+                                  (cfg.vocab, cfg.d_model), _dt(cfg), scale=0.02),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": L.dense_init(jax.random.fold_in(rng, 999),
+                                    (cfg.d_model, cfg.vocab), _dt(cfg)),
+            "mamba": mamba, "shared": shared,
+        }
+
+    # ------------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeSpec):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes if shape.global_batch > 1 else None
+        if shape.kind == "train":
+            return {"tokens": P(dax, None), "labels": P(dax, None)}
+        if shape.kind == "prefill":
+            return {"tokens": P(dax, None)}
+        return {"tokens": P(dax, None), "cache_len": P()}
+
+    def cache_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        s = cfg.ssm
+        b, smax = shape.global_batch, shape.seq_len
+        H, Pd, N = self.n_ssm_heads, s.head_dim, s.d_state
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        conv_ch = self.d_inner + 2 * N
+        ns, ps = self.n_super, self.per_super
+        return {
+            "ssd": jax.ShapeDtypeStruct((ns, ps, b, H, Pd, N), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((ns, ps, b, s.conv_width - 1, conv_ch),
+                                         jnp.float32),
+            "k": jax.ShapeDtypeStruct((ns, b, smax, hkv, hd), _dt(cfg)),
+            "v": jax.ShapeDtypeStruct((ns, b, smax, hkv, hd), _dt(cfg)),
+        }
+
+    def cache_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes
+        m = self.run.model_axis
+        if shape.global_batch == 1:
+            # long-context single-stream decode: sequence-parallel KV cache
+            # (+ KV heads over the model axis); batch dim unshardable
+            kv = P(None, None, dax, m, None)
+            bax = None
+        else:
+            kv = P(None, dax, None, None, None)
+            bax = dax
+        return {"ssd": P(None, None, bax, m, None, None),
+                "conv": P(None, None, bax, None, m),
+                "k": kv, "v": kv}
+
+    def init_cache(self, shape: ShapeSpec, batch: Optional[int] = None):
+        specs = self.cache_specs(shape)
+        b = batch or shape.global_batch
+        out = {}
+        for k, sp in specs.items():
+            shp = list(sp.shape)
+            bdim = 2 if k in ("ssd", "conv") else 1
+            shp[bdim] = b
+            out[k] = jnp.zeros(shp, sp.dtype)
+        return out
+
+    # ------------------------------------------------------------------ mamba block
+    def _conv(self, w, xBC, conv_state, decode: bool):
+        """Causal depthwise conv width-4 via shifted adds.
+        xBC: (B,S,CH); conv_state: (B,width-1,CH) tail of previous tokens."""
+        width = self.cfg.ssm.conv_width
+        full = jnp.concatenate([conv_state, xBC], axis=1)   # (B, S+w-1, CH)
+        out = jnp.zeros_like(xBC)
+        for i in range(width):
+            out = out + full[:, i:i + xBC.shape[1], :] * w["conv_w"][i][None, None]
+        out = out + w["conv_b"][None, None]
+        new_state = full[:, -(width - 1):, :] if width > 1 else conv_state
+        return jax.nn.silu(out), new_state
+
+    def _mamba_block(self, w, x, state, decode: bool):
+        cfg = self.cfg
+        s = cfg.ssm
+        B, S, D = x.shape
+        din, N, H, Pd = self.d_inner, s.d_state, self.n_ssm_heads, s.head_dim
+        ssd_state, conv_state = state
+        h = L.rms_norm(x, w["ln"])
+        proj = (h.astype(_dt(cfg)) @ w["in_proj"]).astype(jnp.float32)
+        z, xin, Bm, Cm, dt_raw = jnp.split(
+            proj, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+        xBC = jnp.concatenate([xin, Bm, Cm], axis=-1)
+        xBC, conv_new = self._conv(w, xBC, conv_state, decode)
+        xin, Bm, Cm = jnp.split(xBC, [din, din + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw + w["dt_bias"][None, None])   # (B,S,H)
+        A = -jnp.exp(w["A_log"])
+        xh = xin.reshape(B, S, H, Pd)
+        Bh = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+        Ch = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+        if decode:
+            y, ssd_new = ssd_decode(xh, dt, A, Bh, Ch, w["D"], ssd_state)
+        else:
+            y, ssd_new = ssd_chunked(xh, dt, A, Bh, Ch, w["D"], ssd_state,
+                                     chunk=self.run.seq_chunk,
+                                     unroll=self.run.layer_mode == "unroll")
+        y = y.reshape(B, S, din) * jax.nn.silu(z)
+        out = y.astype(_dt(cfg)) @ w["out_proj"]
+        return x + out, (ssd_new, conv_new)
+
+    # ------------------------------------------------------------------ shared attention
+    def _shared_block(self, w, x, pos, cache_kv=None, cache_len=None):
+        cfg, run = self.cfg, self.run
+        B, S, D = x.shape
+        hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        h = L.rms_norm(x, w["ln1"]).astype(_dt(cfg))
+        q = (h @ w["wq"]).reshape(B, S, hq, hd)
+        k = (h @ w["wk"]).reshape(B, S, hkv, hd)
+        v = (h @ w["wv"]).reshape(B, S, hkv, hd)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        if cache_kv is None:
+            o = L.flash_attention_jnp(q, k, v, causal=True,
+                                      q_chunk=run.q_chunk,
+                                      kv_chunk=run.kv_chunk,
+                                      unroll=run.attn_unroll)
+            new_kv = None
+        else:
+            ck, cv = cache_kv
+            ck = lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+            o = L.decode_attention_jnp(q, ck, cv, cache_len + 1)
+            new_kv = (ck, cv)
+        x = x + (o.reshape(B, S, hq * hd) @ w["wo"])
+        h = L.rms_norm(x, w["ln2"]).astype(_dt(cfg))
+        x = x + L.swiglu(h, w["w_gate"], w["w_up"], w["w_down"])
+        x = constrain(x, P(self.run.data_axes, None, None))
+        return x, new_kv
+
+    # ------------------------------------------------------------------ stack
+    def _stack(self, params, x, pos, cache, decode: bool):
+        cfg = self.cfg
+        B = x.shape[0]
+        ns, ps = self.n_super, self.per_super
+        if cache is None:
+            cache = self.init_cache(
+                ShapeSpec("tmp", 1, B, "decode"), batch=B)
+        shared_w = params["shared"]
+
+        mamba_block = self._mamba_block
+        shared_block = self._shared_block
+        if self.run.remat and not decode:
+            mamba_block = jax.checkpoint(mamba_block, static_argnums=(3,))
+            shared_block = jax.checkpoint(shared_block)
+
+        def super_block(x, idx, wsup, ssd_s, conv_s, kc, vc):
+            # inner mamba layers
+            def inner(carry, wl_state):
+                x = carry
+                wl, (ss, cs) = wl_state
+                x, (ss2, cs2) = mamba_block(wl, x, (ss, cs), decode)
+                return x, (ss2, cs2)
+
+            if self.run.layer_mode == "scan":
+                x, (ssd_new, conv_new) = lax.scan(
+                    inner, x, (wsup, (ssd_s, conv_s)))
+            else:
+                s_list, c_list = [], []
+                for j in range(ps):
+                    wl = jax.tree.map(lambda a: a[j], wsup)
+                    x, (s2, c2) = inner(x, (wl, (ssd_s[j], conv_s[j])))
+                    s_list.append(s2); c_list.append(c2)
+                ssd_new, conv_new = jnp.stack(s_list), jnp.stack(c_list)
+            # shared attention block
+            if decode:
+                cl = cache["cache_len_scalar"]
+                x, (kc, vc) = shared_block(shared_w, x, pos, (kc, vc), cl)
+            else:
+                x, _ = shared_block(shared_w, x, pos)
+            return x, ssd_new, conv_new, kc, vc
+
+        ssd_all, conv_all = cache["ssd"], cache["conv"]
+        k_all, v_all = cache["k"], cache["v"]
+        ssd_out, conv_out, k_out, v_out = [], [], [], []
+        for i in range(ns):
+            wsup = jax.tree.map(lambda a: a[i], params["mamba"])
+            x, s2, c2, k2, v2 = super_block(
+                x, i, wsup, ssd_all[i], conv_all[i], k_all[i], v_all[i])
+            ssd_out.append(s2); conv_out.append(c2)
+            k_out.append(k2); v_out.append(v2)
+        new_cache = {"ssd": jnp.stack(ssd_out), "conv": jnp.stack(conv_out),
+                     "k": jnp.stack(k_out), "v": jnp.stack(v_out)}
+        return x, new_cache
+
+    # ------------------------------------------------------------------ steps
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+        x = constrain(x, P(self.run.data_axes, None, None))
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self._stack(params, x, pos, None, decode=False)
+        x = L.rms_norm(x, params["final_norm"])
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    def loss_fn(self, params, batch):
+        logits = self.forward(params, batch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        tokens, cache_len = batch["tokens"], batch["cache_len"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+        B = tokens.shape[0]
+        pos = jnp.broadcast_to(cache_len[None, None].astype(jnp.int32),
+                               (B, 1))
+        cache = dict(cache)
+        cache["cache_len_scalar"] = cache_len
+        x, new_cache = self._stack(params, x, pos, cache, decode=True)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, -1]
+        return logits, new_cache

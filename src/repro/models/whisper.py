@@ -1,0 +1,350 @@
+"""Whisper-small — encoder-decoder transformer backbone.
+
+The audio frontend (mel + conv subsampling) is a STUB per the assignment:
+``input_specs()`` supplies precomputed encoder frame embeddings of shape
+(B, 1500, d_model). The backbone is faithful: pre-LN encoder with
+bidirectional self-attention, decoder with causal self-attention +
+cross-attention, GELU MLPs, learned positions on the decoder side and
+sinusoidal on the encoder side.
+
+Decode carries a self-attention KV cache plus per-layer cross-attention K/V
+computed once from the encoder output (stored in the cache pytree).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models.api import RunConfig
+from repro.models.sharding import constrain
+
+MAX_DEC_POS = 32768 * 16 + 8   # large enough for the decode_32k cell
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class WhisperModel:
+    def __init__(self, cfg: ArchConfig, run_cfg: RunConfig):
+        self.cfg = cfg
+        self.run = run_cfg
+        self.enc_layers = cfg.enc_dec.n_encoder_layers
+        self.enc_seq = cfg.enc_dec.encoder_seq
+
+    # ------------------------------------------------------------------ params
+    def _attn_shapes(self, prefix):
+        cfg = self.cfg
+        d, hd, hq = cfg.d_model, cfg.resolved_head_dim, cfg.n_heads
+        dt = _dt(cfg)
+        return {
+            f"{prefix}ln": ((d,), jnp.float32),
+            f"{prefix}lnb": ((d,), jnp.float32),
+            f"{prefix}wq": ((d, hq * hd), dt),
+            f"{prefix}wk": ((d, hq * hd), dt),
+            f"{prefix}wv": ((d, hq * hd), dt),
+            f"{prefix}wo": ((hq * hd, d), dt),
+        }
+
+    def _mlp_shapes(self):
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        dt = _dt(cfg)
+        return {
+            "mln": ((d,), jnp.float32), "mlnb": ((d,), jnp.float32),
+            "w_up": ((d, f), dt), "b_up": ((f,), jnp.float32),
+            "w_down": ((f, d), dt), "b_down": ((d,), jnp.float32),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        dt = _dt(cfg)
+        enc = {**self._attn_shapes("s_"), **self._mlp_shapes()}
+        dec = {**self._attn_shapes("s_"), **self._attn_shapes("x_"),
+               **self._mlp_shapes()}
+        enc_p = {k: jax.ShapeDtypeStruct((self.enc_layers,) + s, d)
+                 for k, (s, d) in enc.items()}
+        dec_p = {k: jax.ShapeDtypeStruct((cfg.n_layers,) + s, d)
+                 for k, (s, d) in dec.items()}
+        return {
+            "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+            "dec_pos": jax.ShapeDtypeStruct((MAX_DEC_POS, cfg.d_model), dt),
+            "enc_final_ln": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "enc_final_lnb": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "dec_final_ln": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "dec_final_lnb": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "encoder": enc_p,
+            "decoder": dec_p,
+        }
+
+    def param_pspecs(self):
+        m = self.run.model_axis
+
+        def spec_for(k, ndim):
+            if k.endswith(("wq", "wk", "wv")) or k == "w_up":
+                return P(*((None,) * (ndim - 1)), m)
+            if k.endswith("wo") or k == "w_down":
+                return P(*((None,) * (ndim - 2)), m, None)
+            if k == "b_up":
+                return P(None, m)
+            return P(*((None,) * ndim))
+
+        enc = {k: spec_for(k, 3) for k in
+               {**self._attn_shapes("s_"), **self._mlp_shapes()}}
+        # 1-D params stacked -> ndim 2
+        for k, (s, _) in {**self._attn_shapes("s_"), **self._mlp_shapes()}.items():
+            if len(s) == 1:
+                enc[k] = P(None, m) if k == "b_up" else P(None, None)
+        dec = {}
+        for k, (s, _) in {**self._attn_shapes("s_"), **self._attn_shapes("x_"),
+                          **self._mlp_shapes()}.items():
+            dec[k] = (P(None, m) if (k == "b_up" and len(s) == 1)
+                      else P(None, None) if len(s) == 1
+                      else spec_for(k, 3))
+        return {
+            # vocab 51865 is not divisible by the model axis: replicate the
+            # (tiny) embedding; logits stay replicated over `model`.
+            "embed": P(None, None), "dec_pos": P(None, None),
+            "enc_final_ln": P(None), "enc_final_lnb": P(None),
+            "dec_final_ln": P(None), "dec_final_lnb": P(None),
+            "encoder": enc, "decoder": dec,
+        }
+
+    def init_params(self, rng):
+        specs = self.param_specs()
+
+        def init_leaf(path, s):
+            key = jax.random.fold_in(rng, abs(hash(path)) % (2**31))
+            name = path.split("/")[-1]
+            if "ln" in name and not name.endswith("b"):
+                return jnp.ones(s.shape, s.dtype)
+            if name.endswith(("lnb", "b_up", "b_down")):
+                return jnp.zeros(s.shape, s.dtype)
+            scale = 0.02 if name in ("embed", "dec_pos") else None
+            return L.dense_init(key, s.shape, s.dtype, scale=scale)
+
+        def walk(prefix, tree):
+            if isinstance(tree, dict):
+                return {k: walk(f"{prefix}/{k}", v) for k, v in tree.items()}
+            return init_leaf(prefix, tree)
+
+        return walk("", specs)
+
+    # ------------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = _dt(cfg)
+        frames = jax.ShapeDtypeStruct((b, self.enc_seq, cfg.d_model), dt)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes if shape.global_batch > 1 else None
+        if shape.kind == "train":
+            return {"frames": P(dax, None, None), "tokens": P(dax, None),
+                    "labels": P(dax, None)}
+        if shape.kind == "prefill":
+            return {"frames": P(dax, None, None), "tokens": P(dax, None)}
+        return {"tokens": P(dax, None), "cache_len": P()}
+
+    def cache_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        b, smax = shape.global_batch, shape.seq_len
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+        dt = _dt(cfg)
+        Lx = cfg.n_layers
+        return {
+            "k": jax.ShapeDtypeStruct((Lx, b, smax, hq, hd), dt),
+            "v": jax.ShapeDtypeStruct((Lx, b, smax, hq, hd), dt),
+            "xk": jax.ShapeDtypeStruct((Lx, b, self.enc_seq, hq, hd), dt),
+            "xv": jax.ShapeDtypeStruct((Lx, b, self.enc_seq, hq, hd), dt),
+        }
+
+    def cache_pspecs(self, shape: ShapeSpec):
+        dax = self.run.data_axes if shape.global_batch > 1 else None
+        kv = P(None, dax, None, None, None)
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+
+    def init_cache(self, shape: ShapeSpec, batch: Optional[int] = None):
+        specs = self.cache_specs(shape)
+        b = batch or shape.global_batch
+        return {k: jnp.zeros((s.shape[0], b) + s.shape[2:], s.dtype)
+                for k, s in specs.items()}
+
+    # ------------------------------------------------------------------ blocks
+    def _self_attn(self, w, x, causal, cache_kv=None, cache_len=None,
+                   prefix="s_"):
+        cfg = self.cfg
+        B, S, D = x.shape
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+        h = L.layer_norm(x, w[f"{prefix}ln"], w[f"{prefix}lnb"]).astype(_dt(cfg))
+        q = (h @ w[f"{prefix}wq"]).reshape(B, S, hq, hd)
+        k = (h @ w[f"{prefix}wk"]).reshape(B, S, hq, hd)
+        v = (h @ w[f"{prefix}wv"]).reshape(B, S, hq, hd)
+        if cache_kv is None:
+            o = L.flash_attention_jnp(q, k, v, causal=causal,
+                                      q_chunk=self.run.q_chunk,
+                                      kv_chunk=self.run.kv_chunk,
+                                      unroll=self.run.attn_unroll)
+            new_kv = None
+        else:
+            ck, cv = cache_kv
+            ck = lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+            o = L.decode_attention_jnp(q, ck, cv, cache_len + 1)
+            new_kv = (ck, cv)
+        return x + (o.reshape(B, S, hq * hd) @ w[f"{prefix}wo"]), new_kv
+
+    def _cross_attn(self, w, x, enc_kv):
+        cfg = self.cfg
+        B, S, D = x.shape
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+        h = L.layer_norm(x, w["x_ln"], w["x_lnb"]).astype(_dt(cfg))
+        q = (h @ w["x_wq"]).reshape(B, S, hq, hd)
+        ek, ev = enc_kv
+        o = L.flash_attention_jnp(q, ek, ev, causal=False,
+                                  q_chunk=self.run.q_chunk,
+                                  kv_chunk=self.run.kv_chunk,
+                                  unroll=self.run.attn_unroll)
+        return x + (o.reshape(B, S, hq * hd) @ w["x_wo"])
+
+    def _enc_kv(self, w, enc_out):
+        cfg = self.cfg
+        B, S, D = enc_out.shape
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+        ek = (enc_out @ w["x_wk"]).reshape(B, S, hq, hd)
+        ev = (enc_out @ w["x_wv"]).reshape(B, S, hq, hd)
+        return ek, ev
+
+    def _mlp(self, w, x):
+        h = L.layer_norm(x, w["mln"], w["mlnb"]).astype(_dt(self.cfg))
+        return x + L.gelu_mlp(h, w["w_up"], w["b_up"], w["w_down"],
+                              w["b_down"])
+
+    def encode(self, params, frames):
+        x = frames + self._sinusoid(self.enc_seq, self.cfg.d_model)[None]
+        x = constrain(x, P(self.run.data_axes, None, None))
+
+        def body(x, wl):
+            x, _ = self._self_attn(wl, x, causal=False)
+            x = self._mlp(wl, x)
+            x = constrain(x, P(self.run.data_axes, None, None))
+            return x, None
+
+        if self.run.layer_mode == "scan":
+            x, _ = lax.scan(body, x, params["encoder"])
+        else:
+            for i in range(self.enc_layers):
+                wl = jax.tree.map(lambda a: a[i], params["encoder"])
+                x, _ = body(x, wl)
+        return L.layer_norm(x, params["enc_final_ln"], params["enc_final_lnb"])
+
+    def _sinusoid(self, S, D):
+        pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+        dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+        ang = pos / jnp.power(10000.0, 2 * dim / D)
+        return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                               axis=-1).astype(_dt(self.cfg))
+
+    # ------------------------------------------------------------------ steps
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+        x = x + lax.dynamic_slice_in_dim(params["dec_pos"], 0, S, 0)[None]
+        x = constrain(x, P(self.run.data_axes, None, None))
+
+        def body(x, wl):
+            x, _ = self._self_attn(wl, x, causal=True)
+            x = self._cross_attn(wl, x, self._enc_kv(wl, enc_out))
+            x = self._mlp(wl, x)
+            x = constrain(x, P(self.run.data_axes, None, None))
+            return x, None
+
+        block = body
+        if self.run.remat:
+            block = jax.checkpoint(body)
+        if self.run.layer_mode == "scan":
+            x, _ = lax.scan(block, x, params["decoder"])
+        else:
+            for i in range(cfg.n_layers):
+                wl = jax.tree.map(lambda a: a[i], params["decoder"])
+                x, _ = block(x, wl)
+        x = L.layer_norm(x, params["dec_final_ln"], params["dec_final_lnb"])
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    def loss_fn(self, params, batch):
+        logits = self.forward(params, batch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    def prefill_cross(self, params, frames, cache):
+        """Fill the cross-attention K/V cache from encoder output."""
+        enc_out = self.encode(params, frames)
+        xks, xvs = [], []
+        for i in range(self.cfg.n_layers):
+            wl = jax.tree.map(lambda a: a[i], params["decoder"])
+            ek, ev = self._enc_kv(wl, enc_out)
+            xks.append(ek); xvs.append(ev)
+        cache = dict(cache)
+        cache["xk"] = jnp.stack(xks)
+        cache["xv"] = jnp.stack(xvs)
+        return cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        tokens, cache_len = batch["tokens"], batch["cache_len"]
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+        posvec = lax.dynamic_slice_in_dim(params["dec_pos"],
+                                          cache_len, 1, 0)[None]
+        x = x + posvec
+
+        def body(x, wl_c):
+            wl, (ck, cv, xk, xv) = wl_c
+            x, (nk, nv) = self._self_attn(wl, x, causal=True,
+                                          cache_kv=(ck, cv),
+                                          cache_len=cache_len)
+            # cross attention against the (precomputed) encoder K/V
+            hq, hd = cfg.n_heads, cfg.resolved_head_dim
+            h = L.layer_norm(x, wl["x_ln"], wl["x_lnb"]).astype(_dt(cfg))
+            q = (h @ wl["x_wq"]).reshape(B, 1, hq, hd)
+            o = L.decode_attention_jnp(q, xk, xv,
+                                       jnp.array(self.enc_seq, jnp.int32))
+            x = x + (o.reshape(B, 1, hq * hd) @ wl["x_wo"])
+            x = self._mlp(wl, x)
+            return x, (nk, nv)
+
+        caches = (cache["k"], cache["v"], cache["xk"], cache["xv"])
+        if self.run.layer_mode == "scan":
+            x, (nk, nv) = lax.scan(body, x, (params["decoder"], caches))
+        else:
+            nks, nvs = [], []
+            for i in range(cfg.n_layers):
+                wl = jax.tree.map(lambda a: a[i], params["decoder"])
+                cs = jax.tree.map(lambda a: a[i], caches)
+                x, (k1, v1) = body(x, (wl, cs))
+                nks.append(k1); nvs.append(v1)
+            nk, nv = jnp.stack(nks), jnp.stack(nvs)
+        x = L.layer_norm(x, params["dec_final_ln"], params["dec_final_lnb"])
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, -1]
+        new_cache = {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+        return logits, new_cache

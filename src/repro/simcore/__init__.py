@@ -1,0 +1,23 @@
+from repro.simcore.engine import (
+    AnyOf,
+    Environment,
+    Event,
+    Interrupt,
+    Process,
+    Resource,
+    RngStream,
+    Store,
+    Timeout,
+)
+
+__all__ = [
+    "AnyOf",
+    "Environment",
+    "Event",
+    "Interrupt",
+    "Process",
+    "Resource",
+    "RngStream",
+    "Store",
+    "Timeout",
+]

@@ -1,0 +1,371 @@
+"""Discrete-event simulation engine (simpy-lite).
+
+A minimal, deterministic, generator-based DES used to run the Dirigent and
+Knative/K8s cluster-manager models in virtual time. Design goals:
+
+  * determinism — a single event heap ordered by (time, seq); all randomness
+    flows through named ``RngStream``s so runs are exactly reproducible;
+  * generator processes — components are written as ``def proc(env): yield
+    env.timeout(x)`` coroutines, like simpy;
+  * tiny surface — Timeout, Event, Store (FIFO queue), Resource (counting
+    semaphore), process interrupt/kill; nothing else is needed.
+
+The same component code can also run in "live" mode (see core/cluster.py):
+live mode never yields timeouts for modeled service times, it executes real
+work instead.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Generator, Optional
+
+import numpy as np
+
+
+class Interrupt(Exception):
+    """Raised inside a process when another process interrupts it."""
+
+    def __init__(self, cause: Any = None):
+        super().__init__(cause)
+        self.cause = cause
+
+
+class Event:
+    """One-shot event; processes wait on it by yielding it.
+
+    Lifecycle: *triggered* means the firing has been scheduled; *fired* means
+    callbacks have run (waiters registered after firing are called at once).
+    """
+
+    __slots__ = ("env", "_value", "_ok", "triggered", "fired", "callbacks")
+
+    def __init__(self, env: "Environment"):
+        self.env = env
+        self._value: Any = None
+        self._ok: bool = True
+        self.triggered = False
+        self.fired = False
+        self.callbacks: list[Callable[["Event"], None]] = []
+
+    def succeed(self, value: Any = None) -> "Event":
+        if self.triggered:
+            raise RuntimeError("event already triggered")
+        self.triggered = True
+        self._value = value
+        self._ok = True
+        self.env._schedule(self.env.now, self._run_callbacks)
+        return self
+
+    def fail(self, exc: BaseException) -> "Event":
+        if self.triggered:
+            raise RuntimeError("event already triggered")
+        self.triggered = True
+        self._value = exc
+        self._ok = False
+        self.env._schedule(self.env.now, self._run_callbacks)
+        return self
+
+    def add_callback(self, cb: Callable[["Event"], None]) -> None:
+        """Register a waiter; if the event already fired, call it next turn."""
+        if self.fired:
+            self.env._schedule(self.env.now, lambda: cb(self))
+        else:
+            self.callbacks.append(cb)
+
+    def _run_callbacks(self) -> None:
+        self.fired = True
+        cbs, self.callbacks = self.callbacks, []
+        if not self._ok and not cbs:
+            # Unobserved process failure: surface it instead of swallowing.
+            raise self._value
+        for cb in cbs:
+            cb(self)
+
+
+class Timeout(Event):
+    def __init__(self, env: "Environment", delay: float, value: Any = None):
+        super().__init__(env)
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        self._value = value
+        env._schedule(env.now + delay, self._trigger_now)
+
+    def _trigger_now(self) -> None:
+        self.triggered = True
+        self._run_callbacks()
+
+
+class Process(Event):
+    """A running generator. Also an Event that triggers when it returns."""
+
+    def __init__(self, env: "Environment", gen: Generator, name: str = "?"):
+        super().__init__(env)
+        self.gen = gen
+        self.name = name
+        self._target: Optional[Event] = None
+        self._alive = True
+        env._schedule(env.now, lambda: self._resume(None, True))
+
+    @property
+    def is_alive(self) -> bool:
+        return self._alive
+
+    def interrupt(self, cause: Any = None) -> None:
+        """Interrupt the process (throws Interrupt at its current yield)."""
+        if not self._alive:
+            return
+        # Detach from whatever it is waiting on, then resume with an error.
+        target, self._target = self._target, None
+        if target is not None and not target.triggered:
+            try:
+                target.callbacks.remove(self._on_target)
+            except ValueError:
+                pass
+        self.env._schedule(self.env.now, lambda: self._throw(Interrupt(cause)))
+
+    def kill(self) -> None:
+        """Terminate the process without running any more of its body."""
+        if not self._alive:
+            return
+        self._alive = False
+        target, self._target = self._target, None
+        if target is not None and not target.triggered:
+            try:
+                target.callbacks.remove(self._on_target)
+            except ValueError:
+                pass
+        self.gen.close()
+        if not self.triggered:
+            self.succeed(None)
+
+    # -- internal ---------------------------------------------------------
+    def _on_target(self, evt: Event) -> None:
+        if self._target is not evt:
+            return  # stale wake-up (we were interrupted/killed meanwhile)
+        self._target = None
+        self._resume(evt._value, evt._ok)
+
+    def _throw(self, exc: BaseException) -> None:
+        if not self._alive:
+            return
+        try:
+            nxt = self.gen.throw(exc)
+        except StopIteration as stop:
+            self._finish(stop.value)
+            return
+        except Interrupt:
+            # Process chose not to catch the interrupt: dies quietly.
+            self._finish(None)
+            return
+        except BaseException as e:  # noqa: BLE001 — simpy semantics
+            self._fail(e)
+            return
+        self._wait_on(nxt)
+
+    def _resume(self, value: Any, ok: bool) -> None:
+        if not self._alive:
+            return
+        try:
+            nxt = self.gen.send(value) if ok else self.gen.throw(value)
+        except StopIteration as stop:
+            self._finish(stop.value)
+            return
+        except BaseException as e:  # noqa: BLE001 — simpy semantics
+            self._fail(e)
+            return
+        self._wait_on(nxt)
+
+    def _wait_on(self, evt: Any) -> None:
+        if not isinstance(evt, Event):
+            raise TypeError(f"process {self.name} yielded non-event {evt!r}")
+        self._target = evt
+        evt.add_callback(self._on_target)
+
+    def _finish(self, value: Any) -> None:
+        self._alive = False
+        if not self.triggered:
+            self.succeed(value)
+
+    def _fail(self, exc: BaseException) -> None:
+        """Process raised: fail our event. A waiting parent gets the exception
+        thrown at its yield; an unobserved failure crashes the event loop."""
+        self._alive = False
+        if not self.triggered:
+            self.fail(exc)
+
+
+class AnyOf(Event):
+    """Triggers when the first of ``events`` triggers; value = (index, value)."""
+
+    def __init__(self, env: "Environment", events: list[Event]):
+        super().__init__(env)
+        self._done = False
+        for i, e in enumerate(events):
+            e.add_callback(self._make_cb(i))
+
+    def _make_cb(self, i: int) -> Callable[[Event], None]:
+        def cb(evt: Event) -> None:
+            self._fire(i, evt._value)
+        return cb
+
+    def _fire(self, i: int, value: Any) -> None:
+        if self._done or self.triggered:
+            return
+        self._done = True
+        self.succeed((i, value))
+
+
+class Store:
+    """Unbounded FIFO queue with blocking get()."""
+
+    def __init__(self, env: "Environment"):
+        self.env = env
+        self.items: list[Any] = []
+        self._getters: list[Event] = []
+
+    def put(self, item: Any) -> None:
+        if self._getters:
+            evt = self._getters.pop(0)
+            evt.succeed(item)
+        else:
+            self.items.append(item)
+
+    def get(self) -> Event:
+        evt = Event(self.env)
+        if self.items:
+            evt.succeed(self.items.pop(0))
+        else:
+            self._getters.append(evt)
+        return evt
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class Resource:
+    """Counting semaphore; models a contended resource (CPU, lock, ports)."""
+
+    def __init__(self, env: "Environment", capacity: int = 1):
+        self.env = env
+        self.capacity = capacity
+        self.in_use = 0
+        self._waiters: list[Event] = []
+
+    def acquire(self) -> Event:
+        evt = Event(self.env)
+        if self.in_use < self.capacity:
+            self.in_use += 1
+            evt.succeed(None)
+        else:
+            self._waiters.append(evt)
+        return evt
+
+    def release(self) -> None:
+        if self._waiters:
+            evt = self._waiters.pop(0)
+            evt.succeed(None)
+        else:
+            self.in_use -= 1
+            if self.in_use < 0:
+                raise RuntimeError("release without acquire")
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._waiters)
+
+
+@dataclass
+class RngStream:
+    """Named deterministic random stream."""
+
+    rng: np.random.Generator
+
+    def expovariate(self, rate: float) -> float:
+        return float(self.rng.exponential(1.0 / rate))
+
+    def lognormal(self, median: float, sigma: float) -> float:
+        return float(median * np.exp(self.rng.normal(0.0, sigma)))
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return float(self.rng.uniform(lo, hi))
+
+    def randint(self, lo: int, hi: int) -> int:
+        return int(self.rng.integers(lo, hi))
+
+    def choice(self, n: int) -> int:
+        return int(self.rng.integers(0, n))
+
+    def random(self) -> float:
+        return float(self.rng.random())
+
+
+class Environment:
+    """The event loop. Time is float seconds."""
+
+    def __init__(self, seed: int = 0):
+        self.now: float = 0.0
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._seed = seed
+        self._streams: dict[str, RngStream] = {}
+
+    # -- rng ---------------------------------------------------------------
+    def rng(self, name: str) -> RngStream:
+        if name not in self._streams:
+            # independent child stream per name, derived from the seed
+            ss = np.random.SeedSequence(self._seed)
+            child = np.random.SeedSequence(
+                entropy=ss.entropy, spawn_key=(abs(hash(name)) % (2**31),)
+            )
+            self._streams[name] = RngStream(np.random.default_rng(child))
+        return self._streams[name]
+
+    # -- primitives ---------------------------------------------------------
+    def timeout(self, delay: float, value: Any = None) -> Timeout:
+        return Timeout(self, delay, value)
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def any_of(self, events: list[Event]) -> AnyOf:
+        return AnyOf(self, events)
+
+    def store(self) -> Store:
+        return Store(self)
+
+    def resource(self, capacity: int = 1) -> Resource:
+        return Resource(self, capacity)
+
+    def process(self, gen: Generator, name: str = "?") -> Process:
+        return Process(self, gen, name)
+
+    # -- loop ---------------------------------------------------------------
+    def _schedule(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self._heap:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                self.now = until
+                return
+            heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        if until is not None:
+            self.now = until
+
+    def run_until_event(self, evt: Event, hard_limit: float = 1e12) -> Any:
+        while not evt.fired:
+            if not self._heap:
+                break
+            t, _, fn = heapq.heappop(self._heap)
+            if t > hard_limit:
+                raise RuntimeError("run_until_event exceeded hard limit")
+            self.now = t
+            fn()
+        if not evt.fired:
+            raise RuntimeError("event never triggered")
+        return evt._value

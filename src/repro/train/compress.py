@@ -1,0 +1,56 @@
+"""int8 gradient/checkpoint compression with stochastic rounding.
+
+Per-tensor absmax scaling; stochastic rounding keeps the quantizer unbiased
+(E[deq(q(x))] = x), which is what makes it usable on the gradient path. On a
+real multi-pod deployment this codec wraps the pod-axis (DCN) gradient
+all-reduce — DCN bandwidth is the scarce resource at 2+ pods; here it is
+exercised on the gradient path pre-optimizer and by the checkpoint writer.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    lo = jnp.floor(y)
+    p_up = y - lo
+    up = jax.random.uniform(key, x.shape) < p_up
+    q = jnp.clip(lo + up.astype(jnp.float32), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(tree: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        q, s = quantize_int8(leaf, jax.random.fold_in(key, i))
+        out.append((q, s))
+    return jax.tree.unflatten(treedef, out)
+
+
+def decompress_tree(ctree: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda qs: dequantize_int8(qs[0], qs[1], dtype),
+                        ctree, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and hasattr(x[0], "dtype"))
+
+
+def roundtrip_tree(tree: Any, key: jax.Array) -> Any:
+    """Quantize+dequantize in place (the numerical effect of a compressed
+    all-reduce, without materializing int8 buffers across the tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        q, s = quantize_int8(leaf, jax.random.fold_in(key, i))
+        out.append(dequantize_int8(q, s, leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,97 @@
+"""AdamW in pure JAX, with optional ZeRO-1 optimizer-state sharding."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_init_specs(param_specs) -> AdamWState:
+    """ShapeDtypeStruct version for AOT lowering."""
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       param_specs)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32,
+                      nu=jax.tree.map(lambda s: s, f32))
+
+
+def zero1_pspec(param_pspec: P, shape: tuple, dax) -> P:
+    """ZeRO-1: additionally shard optimizer state over the data axes on the
+    first dimension that is unsharded (moment tensors are only read/written
+    by the optimizer, so data-sharding them removes their replication).
+    No-op if the param spec already uses any of the data axes (e.g. FSDP
+    expert shards) — a mesh axis may appear only once in a spec."""
+    dax_set = set(dax if isinstance(dax, (tuple, list)) else (dax,))
+    for entry in param_pspec:
+        entries = entry if isinstance(entry, (tuple, list)) else (entry,)
+        if dax_set & set(e for e in entries if e is not None):
+            return param_pspec
+    dims = list(param_pspec) + [None] * (len(shape) - len(param_pspec))
+    for i, (entry, size) in enumerate(zip(dims, shape)):
+        if entry is None and size >= 64 and size % 2 == 0:
+            dims[i] = dax
+            return P(*dims)
+    return P(*dims)
+
+
+def adamw_pspecs(param_pspecs, param_specs, use_zero1: bool = False,
+                 dax=("pod", "data")) -> AdamWState:
+    if not use_zero1:
+        mu = param_pspecs
+    else:
+        mu = jax.tree.map(
+            lambda ps, sp: zero1_pspec(ps, sp.shape, dax),
+            param_pspecs, param_specs,
+            is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), mu=mu, nu=jax.tree.map(lambda x: x, mu))
+
+
+def adamw_update(grads, state: AdamWState, params, lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0):
+    step = state.step + 1
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        gnorm = jnp.zeros(())
+        scale = 1.0
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v,
+                                                 flat_p)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_params = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), gnorm

@@ -1,0 +1,68 @@
+"""Train-step factory: loss + grad (+ accumulation) + AdamW, pjit-ready."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import RunConfig
+from repro.train.optimizer import AdamWState, adamw_update
+from repro.train.compress import roundtrip_tree
+
+
+def make_train_step(model, lr: float = 3e-4,
+                    weight_decay: float = 0.1) -> Callable:
+    """Returns train_step(params, opt_state, batch, rng) ->
+    (params, opt_state, metrics). Honors RunConfig.grad_accum and
+    RunConfig.grad_compress."""
+    run: RunConfig = model.run
+
+    def compute_grads(params, batch):
+        return jax.value_and_grad(model.loss_fn)(params, batch)
+
+    def train_step(params, opt_state: AdamWState, batch, rng):
+        accum = run.grad_accum
+        if accum <= 1:
+            loss, grads = compute_grads(params, batch)
+        else:
+            # split the batch into microbatches along dim 0 and scan:
+            # overlaps per-microbatch backward with the gradient reduction
+            def micro(carry, mb):
+                acc = carry
+                l, g = compute_grads(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, l
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            # unrolled in exact-cost (probe) mode so cost_analysis counts
+            # every microbatch (see launch/dryrun.py)
+            grads, losses = jax.lax.scan(micro, zero, mbatch,
+                                         unroll=(run.layer_mode == "unroll"))
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = jnp.mean(losses)
+
+        if run.grad_compress:
+            # int8 stochastic-rounding codec on the gradient path (stands in
+            # for the pod-axis DCN compressed all-reduce; see compress.py)
+            grads = roundtrip_tree(grads, rng)
+
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch)
+    return eval_step

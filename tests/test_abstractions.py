@@ -1,0 +1,63 @@
+"""Dirigent abstraction tests: the 16-byte sandbox codec + record round-trips."""
+import pytest
+
+from repro.core.abstractions import (
+    DataPlaneInfo, Function, Sandbox, SandboxState, ScalingConfig,
+    WorkerNodeInfo,
+)
+
+
+def test_sandbox_state_is_16_bytes():
+    sb = Sandbox(sandbox_id=123456, function_name="f", ip=(10, 0, 3, 44),
+                 port=8443, worker_id=77, state=SandboxState.READY)
+    raw = sb.to_bytes()
+    assert len(raw) == 16          # the paper's headline number (§3.2)
+    back = Sandbox.from_bytes(raw, function_name="f")
+    assert back.sandbox_id == 123456
+    assert back.ip == (10, 0, 3, 44)
+    assert back.port == 8443
+    assert back.worker_id == 77
+    assert back.state == SandboxState.READY
+
+
+def test_function_record_roundtrip():
+    fn = Function(name="my-func", image_url="registry://img:v3", port=8080,
+                  scaling=ScalingConfig(target_concurrency=4.0,
+                                        stable_window=30.0, max_scale=99))
+    back = Function.from_record(fn.persisted_record())
+    assert back.name == fn.name
+    assert back.image_url == fn.image_url
+    assert back.port == fn.port
+    assert back.scaling.target_concurrency == 4.0
+    assert back.scaling.stable_window == 30.0
+    assert back.scaling.max_scale == 99
+    # metrics are NOT persisted (Table 3)
+    assert back.metrics.inflight == 0
+
+
+def test_function_record_excludes_metrics():
+    fn = Function(name="f", image_url="i", port=80)
+    fn.metrics.inflight = 42
+    fn.metrics.total_invocations = 1000
+    back = Function.from_record(fn.persisted_record())
+    assert back.metrics.inflight == 0
+    assert back.metrics.total_invocations == 0
+
+
+def test_worker_and_dataplane_records():
+    w = WorkerNodeInfo(worker_id=3, name="w3", ip=(10, 0, 0, 3), port=9000,
+                       cpu_capacity_millis=12000, mem_capacity_mb=32000)
+    wb = WorkerNodeInfo.from_record(w.persisted_record())
+    assert (wb.worker_id, wb.name, wb.ip, wb.port) == (3, "w3", (10, 0, 0, 3), 9000)
+    assert wb.cpu_capacity_millis == 12000
+
+    d = DataPlaneInfo(dp_id=1, ip=(10, 1, 0, 1), port=8080)
+    db = DataPlaneInfo.from_record(d.persisted_record())
+    assert (db.dp_id, db.ip, db.port) == (1, (10, 1, 0, 1), 8080)
+
+
+def test_sandbox_record_much_smaller_than_k8s_pod():
+    """Paper §3.2: 16 bytes vs ~17 KB K8s Pod objects (3 orders of magnitude)."""
+    sb = Sandbox(sandbox_id=1, function_name="f", ip=(1, 2, 3, 4), port=80,
+                 worker_id=0)
+    assert len(sb.to_bytes()) * 1000 <= 17 * 1024

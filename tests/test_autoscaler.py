@@ -1,0 +1,68 @@
+"""KPA autoscaler policy unit tests (shared by Dirigent and the baseline)."""
+from repro.core.abstractions import ScalingConfig
+from repro.core.autoscaler import ConcurrencyWindow, FunctionAutoscalerState
+
+
+def make(target=1.0, stable=60.0, panic=6.0, grace=30.0):
+    return FunctionAutoscalerState(ScalingConfig(
+        target_concurrency=target, stable_window=stable, panic_window=panic,
+        scale_to_zero_grace=grace))
+
+
+def test_window_average_and_eviction():
+    w = ConcurrencyWindow(horizon=10.0)
+    w.record(0.0, 4.0)
+    w.record(5.0, 8.0)
+    assert w.average(5.0) == 6.0
+    assert w.average(11.0) == 8.0      # first sample evicted
+    assert w.average(50.0) == 0.0
+
+
+def test_scale_up_proportional_to_concurrency():
+    st = make(target=2.0)
+    st.record_metric(0.0, 10.0)
+    assert st.desired(0.0, ready=0) == 5      # ceil(10/2)
+
+
+def test_panic_mode_entry_and_no_downscale():
+    st = make()
+    # steady low load
+    for t in range(0, 60, 2):
+        st.record_metric(float(t), 1.0)
+    assert st.desired(60.0, ready=1) == 1
+    # sudden burst: panic window avg >> 2x ready
+    st.record_metric(61.0, 50.0)
+    d = st.desired(61.0, ready=1)
+    assert st.in_panic_since is not None
+    assert d >= 10           # panic-window avg includes trailing calm samples
+    # during panic, never scale below the panic max even if load drops
+    st.record_metric(63.0, 0.0)
+    assert st.desired(63.0, ready=d) >= d
+
+
+def test_scale_to_zero_waits_for_grace():
+    st = make(stable=10.0, grace=5.0)
+    st.record_metric(0.0, 2.0)
+    assert st.desired(0.0, 0) == 2
+    # load disappears; stable window drains by t=11
+    t = 11.0
+    st.record_metric(t, 0.0)
+    d = st.desired(t, ready=2)
+    assert d >= 1            # grace holds one sandbox
+    d = st.desired(t + 6.0, ready=1)
+    assert d == 0            # grace expired -> scale to zero
+
+
+def test_recovery_hold_prevents_downscale():
+    st = make()
+    st.no_downscale_until = 100.0
+    st.record_metric(0.0, 0.0)
+    assert st.desired(50.0, ready=7) >= 7     # hold active
+    assert st.desired(150.0, ready=7) < 7     # hold expired
+
+
+def test_max_scale_cap():
+    st = make()
+    st.scaling.max_scale = 3
+    st.record_metric(0.0, 100.0)
+    assert st.desired(0.0, 0) == 3

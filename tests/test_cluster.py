@@ -1,0 +1,131 @@
+"""End-to-end Dirigent cluster behaviour (sim mode)."""
+import numpy as np
+import pytest
+
+from repro.core import Cluster, Function, InvocationMode, ScalingConfig
+from repro.simcore import Environment
+
+
+def make_cluster(seed=1, **kw):
+    env = Environment(seed=seed)
+    kw.setdefault("n_workers", 8)
+    cl = Cluster(env, **kw)
+    cl.start()
+    return env, cl
+
+
+def test_cold_then_warm_invocation():
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    cold = cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    assert not cold.failed
+    assert cold.cold
+    # Firecracker snapshot regime: cold start in the tens of ms (paper §5.2.1)
+    assert 0.02 < cold.scheduling_latency < 0.2
+    warm = cl.invoke("f", exec_time=0.01)
+    env.run(until=10.0)
+    assert not warm.failed and not warm.cold
+    # warm path ~1.4 ms p50 (C5)
+    assert warm.scheduling_latency < 0.005
+
+
+def test_no_persistent_writes_on_invocation_path():
+    """The paper's core design principle: cold starts write nothing durable."""
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    writes_after_register = cl.store.write_count
+    for _ in range(5):
+        cl.invoke("f", exec_time=0.01)
+        env.run(until=env.now + 3.0)
+    assert cl.collector.sandbox_creations >= 1
+    assert cl.store.write_count == writes_after_register
+
+
+def test_persist_ablation_writes_on_critical_path():
+    env, cl = make_cluster(persist_sandbox_state=True)
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    w0 = cl.store.write_count
+    cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    assert cl.store.write_count > w0
+
+
+def test_autoscaling_up_and_scale_to_zero():
+    env, cl = make_cluster()
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=5.0, panic_window=2.0,
+                              scale_to_zero_grace=3.0)))
+    # 4 concurrent long requests -> needs 4 sandboxes (concurrency target 1)
+    invs = [cl.invoke("f", exec_time=2.0) for _ in range(4)]
+    env.run(until=15.0)
+    assert all(not i.failed for i in invs)
+    assert cl.collector.sandbox_creations >= 2
+    leader = cl.control_plane_leader()
+    # after idle > stable_window + grace, scaled back to zero
+    env.run(until=60.0)
+    assert leader.functions["f"].ready_count == 0
+    assert cl.collector.sandbox_teardowns >= cl.collector.sandbox_creations
+
+
+def test_sandbox_concurrency_throttling():
+    env, cl = make_cluster(sandbox_concurrency=2)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(target_concurrency=2)))
+    invs = [cl.invoke("f", exec_time=1.0) for _ in range(2)]
+    env.run(until=10.0)
+    # both fit in ONE sandbox with concurrency 2
+    assert cl.collector.sandbox_creations == 1
+    assert all(not i.failed for i in invs)
+
+
+def test_async_invocation_at_least_once():
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    inv = cl.invoke("f", exec_time=0.01, mode=InvocationMode.ASYNC)
+    env.run(until=10.0)
+    assert inv.t_done > 0 and not inv.failed
+    # the durable queue entry is cleaned up after completion
+    assert not cl.store.peek_prefix("asyncq/")
+
+
+def test_function_hash_steering_centralizes_metrics():
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    for _ in range(6):
+        cl.invoke("f", exec_time=0.5)
+    env.run(until=0.05)
+    owners = [dp for dp in cl.data_planes
+              if dp.tables.get("f") and dp.tables["f"].inflight > 0]
+    assert len(owners) == 1     # all invocations of f land on one DP
+
+
+def test_hedged_requests_beat_stragglers():
+    """Straggler mitigation: duplicate slow requests onto another replica."""
+    from repro.core.abstractions import ScalingConfig as SC
+    env, cl = make_cluster(hedge_after=0.2)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=SC(target_concurrency=1,
+                                         stable_window=300,
+                                         scale_to_zero_grace=300)))
+    # warm up two sandboxes on two workers
+    a = cl.invoke("f", exec_time=1.0)
+    b = cl.invoke("f", exec_time=1.0)
+    env.run(until=10.0)
+    leader = cl.control_plane_leader()
+    st = leader.functions["f"]
+    wids = {sb.worker_id for sb in st.sandboxes.values()}
+    assert len(wids) >= 2
+    # make one worker a straggler (100x slower)
+    slow_wid = sorted(wids)[0]
+    cl.workers[slow_wid].slow_factor = 100.0
+    invs = [cl.invoke("f", exec_time=0.05) for _ in range(6)]
+    env.run(until=60.0)
+    assert all(not i.failed for i in invs)
+    dp = [d for d in cl.data_planes if d.hedged > 0]
+    assert dp, "no hedges fired"
+    assert dp[0].hedge_wins >= 1
+    # hedged requests finish in ~hedge_after + exec, not 100x exec
+    lats = sorted(i.e2e_latency for i in invs)
+    assert lats[-1] < 2.0, f"straggler not mitigated: {lats}"

@@ -1,0 +1,148 @@
+"""Kernel validation: Pallas (interpret mode) + chunked jnp vs ref oracles.
+
+Per the deliverable: each Pallas kernel is swept over shapes/dtypes and
+asserted allclose against the pure-jnp oracle in ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.chunked import ssd_chunked, wkv6_chunked
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_chunk import wkv6_pallas
+from repro.kernels.ssd_chunk import ssd_pallas
+from repro.models.layers import repeat_kv
+
+
+def _qkv(B, S, Hq, Hkv, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D)).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bq,bkv", [
+    (1, 128, 2, 2, 64, 64, 64),      # MHA
+    (2, 256, 4, 2, 64, 128, 64),     # GQA
+    (1, 128, 4, 1, 128, 32, 128),    # MQA, wide head
+    (2, 192, 3, 3, 32, 64, 96),      # non-pow2 blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_pallas(B, S, Hq, Hkv, D, bq, bkv, dtype, causal):
+    q, k, v = _qkv(B, S, Hq, Hkv, D, dtype)
+    g = Hq // Hkv
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   repeat_kv(k, g).astype(jnp.float32),
+                                   repeat_kv(v, g).astype(jnp.float32),
+                                   causal=causal)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_kv=bkv, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("B,Smax,Hq,Hkv,D,bkv,clen", [
+    (1, 256, 2, 2, 64, 64, 256),
+    (2, 256, 4, 2, 64, 128, 130),
+    (2, 512, 8, 1, 128, 256, 7),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_pallas(B, Smax, Hq, Hkv, D, bkv, clen, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D)).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D)).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D)).astype(dtype)
+    cl = jnp.array(clen, jnp.int32)
+    want = ref.decode_attention_ref(q.astype(jnp.float32),
+                                    kc.astype(jnp.float32),
+                                    vc.astype(jnp.float32), cl)
+    got = decode_attention_pallas(q, kc, vc, cl, block_kv=bkv, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def _wkv_inputs(B, S, H, dk, dv, dtype, seed=2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = (jax.random.normal(ks[0], (B, S, H, dk)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, dk)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, dv)) * 0.5).astype(dtype)
+    w = jnp.clip(jnp.exp(-jnp.exp(
+        jax.random.normal(ks[3], (B, S, H, dk)) * 0.5 - 1.5)),
+        0.62, 0.9999).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (H, dk)) * 0.3).astype(jnp.float32)
+    s0 = (jax.random.normal(ks[5], (B, H, dk, dv)) * 0.1).astype(jnp.float32)
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("B,S,H,dk,dv,chunk", [
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 3, 16, 24, 32),
+    (1, 256, 2, 32, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_and_chunked(B, S, H, dk, dv, chunk, dtype):
+    r, k, v, w, u, s0 = _wkv_inputs(B, S, H, dk, dv, dtype)
+    y_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    y_c, s_c = wkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    y_p, s_p = wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref),
+                               atol=tol * 5, rtol=tol * 5)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref),
+                               atol=tol * 5, rtol=tol * 5)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_ref),
+                               atol=tol * 5, rtol=tol * 5)
+
+
+def _ssd_inputs(b, S, H, Pd, N, dtype, seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    x = (jax.random.normal(ks[0], (b, S, H, Pd)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)) * 0.5) * 0.5
+          ).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = (jax.random.normal(ks[3], (b, S, H, N)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, S, H, N)) * 0.5).astype(dtype)
+    D = jax.random.normal(ks[5], (H,)) * 0.3
+    h0 = (jax.random.normal(ks[6], (b, H, Pd, N)) * 0.1).astype(jnp.float32)
+    return x, dt, A, B, C, D, h0
+
+
+@pytest.mark.parametrize("b,S,H,Pd,N,chunk", [
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas_and_chunked(b, S, H, Pd, N, chunk, dtype):
+    x, dt, A, B, C, D, h0 = _ssd_inputs(b, S, H, Pd, N, dtype)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, B, C, D, h0)
+    y_c, h_c = ssd_chunked(x, dt, A, B, C, D, h0, chunk=chunk)
+    y_p, h_p = ssd_pallas(x, dt, A, B, C, D, h0, chunk=chunk, interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref),
+                               atol=tol * 5, rtol=tol * 5)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref),
+                               atol=tol * 5, rtol=tol * 5)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_ref),
+                               atol=tol * 5, rtol=tol * 5)
+
+
+def test_ops_dispatch():
+    q, k, v = _qkv(1, 64, 2, 2, 32, jnp.float32)
+    a = ops.flash_attention(q, k, v, impl="jnp", q_chunk=32, kv_chunk=32)
+    b = ops.flash_attention(q, k, v, impl="pallas_interpret")
+    c = ops.flash_attention(q, k, v, impl="reference")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), atol=2e-5,
+                               rtol=2e-5)

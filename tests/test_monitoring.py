@@ -1,0 +1,33 @@
+"""Metrics/event-log endpoint tests (paper §4 operations & monitoring)."""
+from repro.core import Cluster, Function
+from repro.core.monitoring import render_event_log, render_metrics
+from repro.simcore import Environment
+
+
+def test_metrics_exposition():
+    env = Environment(seed=3)
+    cl = Cluster(env, n_workers=4)
+    cl.start()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    text = render_metrics(cl)
+    assert 'dirigent_invocations_total{status="ok"} 1' in text
+    assert "dirigent_sandbox_creations_total 1" in text
+    assert 'dirigent_function_ready_sandboxes{function="f"} 1' in text
+    assert "dirigent_workers_alive 4" in text
+    # persistence counter only reflects registration-time writes
+    assert "dirigent_persistent_writes_total" in text
+
+
+def test_event_log_contains_failover():
+    env = Environment(seed=4)
+    cl = Cluster(env, n_workers=4, enable_ha_sim=True)
+    cl.start()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    env.run(until=2.0)
+    cl.fail_control_plane_leader()
+    env.run(until=4.0)
+    log = render_event_log(cl)
+    assert "cp-failed" in log
+    assert "leader-elected" in log

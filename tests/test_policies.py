@@ -1,0 +1,72 @@
+"""Pluggable scheduling-policy tests (paper §4: Hermod, CH-RLU support)."""
+from dataclasses import dataclass
+
+import pytest
+
+from repro.core import Cluster, Function, ScalingConfig
+from repro.core.placement import Placer
+from repro.core.policies import lb_ch_rlu, lb_least_loaded, place_hermod
+from repro.simcore import Environment
+
+
+@dataclass
+class Ep:
+    in_use: int = 0
+    capacity: int = 4
+
+    @property
+    def free(self):
+        return self.capacity - self.in_use
+
+
+def test_ch_rlu_warm_locality_and_bound():
+    eps = {i: Ep() for i in range(4)}
+    first = lb_ch_rlu(eps, "fnA")
+    # repeated picks for the same function stick to the same endpoint...
+    assert lb_ch_rlu(eps, "fnA") is first
+    # ...until it exceeds the load bound, then the walk moves on
+    first.in_use = 4
+    nxt = lb_ch_rlu(eps, "fnA")
+    assert nxt is not first and nxt.free > 0
+
+
+def test_ch_rlu_full_ring_returns_none():
+    eps = {i: Ep(in_use=4) for i in range(3)}
+    assert lb_ch_rlu(eps, "fnA") is None
+
+
+def test_least_loaded_picks_minimum():
+    eps = {0: Ep(in_use=3), 1: Ep(in_use=1), 2: Ep(in_use=2)}
+    assert lb_least_loaded(eps, "f") is eps[1]
+
+
+def test_hermod_packs_busiest_fitting_node():
+    p = Placer(policy="hermod_packing")
+    for i in range(3):
+        p.add_node(i, 1000, 1000)
+    p.commit(1, 500, 500)        # node 1 is half full
+    assert p.place(100, 100) == 1   # packs onto the busiest
+    # fill node 1; next goes to the next-busiest
+    p.commit(1, 400, 400)
+    assert p.place(200, 200) != 1
+
+
+def test_balanced_spreads_load():
+    p = Placer(policy="balanced")
+    for i in range(3):
+        p.add_node(i, 1000, 1000)
+    picks = [p.place(100, 100) for _ in range(3)]
+    assert len(set(picks)) == 3      # spreads across nodes
+
+
+def test_cluster_runs_with_alternate_policies():
+    env = Environment(seed=5)
+    cl = Cluster(env, n_workers=6, lb_policy="ch_rlu",
+                 placement_policy="hermod_packing")
+    cl.start()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(stable_window=60,
+                                                    scale_to_zero_grace=60)))
+    invs = [cl.invoke("f", exec_time=0.5) for _ in range(4)]
+    env.run(until=20.0)
+    assert all(not i.failed for i in invs)

@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.abstractions import Function, Sandbox, SandboxState, ScalingConfig
+from repro.core.autoscaler import FunctionAutoscalerState
+from repro.core.placement import Placer
+from repro.core.baseline_knative import TokenBucket
+from repro.simcore import Environment
+
+
+@given(sid=st.integers(0, 2**32 - 1),
+       ip=st.tuples(*[st.integers(0, 255)] * 4),
+       port=st.integers(0, 2**16 - 1),
+       wid=st.integers(0, 2**32 - 1),
+       state=st.sampled_from(list(SandboxState)))
+def test_sandbox_codec_roundtrip(sid, ip, port, wid, state):
+    sb = Sandbox(sandbox_id=sid, function_name="f", ip=ip, port=port,
+                 worker_id=wid, state=state)
+    raw = sb.to_bytes()
+    assert len(raw) == 16
+    back = Sandbox.from_bytes(raw, "f")
+    assert (back.sandbox_id, back.ip, back.port, back.worker_id,
+            back.state) == (sid, ip, port, wid, state)
+
+
+@given(name=st.text(min_size=1, max_size=64).filter(lambda s: "\x00" not in s),
+       url=st.text(min_size=0, max_size=128),
+       port=st.integers(0, 2**16 - 1),
+       tc=st.floats(0.5, 64, allow_nan=False),
+       ms=st.integers(1, 100000))
+def test_function_record_roundtrip_property(name, url, port, tc, ms):
+    fn = Function(name=name, image_url=url, port=port,
+                  scaling=ScalingConfig(target_concurrency=tc, max_scale=ms))
+    back = Function.from_record(fn.persisted_record())
+    assert back.name == name and back.image_url == url and back.port == port
+    assert abs(back.scaling.target_concurrency - tc) < 1e-3
+    assert back.scaling.max_scale == ms
+
+
+@given(concurrency=st.lists(st.integers(0, 50), min_size=1, max_size=60),
+       target=st.floats(0.5, 8.0))
+@settings(max_examples=60)
+def test_autoscaler_desired_invariants(concurrency, target):
+    """desired is never negative, bounded by max_scale, and zero demand
+    never scales UP."""
+    sc = ScalingConfig(target_concurrency=target, max_scale=100)
+    state = FunctionAutoscalerState(sc)
+    t = 0.0
+    ready = 0
+    for c in concurrency:
+        state.record_metric(t, float(c))
+        d = state.desired(t, ready)
+        assert 0 <= d <= sc.max_scale
+        if all(x == 0 for x in concurrency[:concurrency.index(c) + 1]):
+            assert d <= max(ready, 0)
+        ready = d
+        t += 2.0
+
+
+@given(reqs=st.lists(st.tuples(st.integers(50, 2000), st.integers(64, 2048)),
+                     min_size=1, max_size=40),
+       n_nodes=st.integers(1, 12))
+@settings(max_examples=40)
+def test_placement_never_overcommits(reqs, n_nodes):
+    p = Placer()
+    for i in range(n_nodes):
+        p.add_node(i, 4000, 8192)
+    placed = []
+    for cpu, mem in reqs:
+        wid = p.place(cpu, mem)
+        if wid is not None:
+            placed.append((wid, cpu, mem))
+    for i in range(n_nodes):
+        node = p.nodes[i]
+        assert node.cpu_used <= node.cpu_capacity
+        assert node.mem_used <= node.mem_capacity
+    # conservation: committed == sum of placed requests
+    assert sum(c for _, c, _ in placed) == sum(n.cpu_used
+                                               for n in p.nodes.values())
+    # release restores to zero
+    for wid, cpu, mem in placed:
+        p.release(wid, cpu, mem)
+    assert all(n.cpu_used == 0 and n.mem_used == 0 for n in p.nodes.values())
+
+
+@given(qps=st.floats(1.0, 100.0), burst=st.integers(1, 50),
+       n=st.integers(1, 80))
+@settings(max_examples=40)
+def test_token_bucket_rate_limit(qps, burst, n):
+    """After the burst credit, admission times respect the refill rate."""
+    env = Environment(seed=0)
+    tb = TokenBucket(env, qps, burst)
+    times = []
+
+    def client(env):
+        for _ in range(n):
+            yield from tb.acquire()
+            times.append(env.now)
+
+    env.process(client(env), name="c")
+    env.run()
+    assert len(times) == n
+    # the i-th admission can't be earlier than (i - burst) / qps
+    for i, t in enumerate(times):
+        assert t >= (i - burst) / qps - 1e-6
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+@given(data=st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
+                               st.binary(min_size=0, max_size=64)),
+                     min_size=1, max_size=30))
+def test_filestore_replay_equals_memory(tmp_path_factory, data):
+    from repro.core.persistence import FileStore
+    path = str(tmp_path_factory.mktemp("fs") / "wal.log")
+    st_ = FileStore(path, fsync=False)
+    expect = {}
+    for k, v in data:
+        if v == b"":
+            st_.write(k, None)
+            expect.pop(k, None)
+        else:
+            st_.write(k, v)
+            expect[k] = v
+    st_.close()
+    st2 = FileStore(path, fsync=False)
+    assert st2.data == expect
+    st2.close()

@@ -1,0 +1,248 @@
+"""Unit tests for the discrete-event engine."""
+import pytest
+
+from repro.simcore import Environment, Interrupt
+
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(env, name, delay):
+        yield env.timeout(delay)
+        log.append((env.now, name))
+
+    env.process(proc(env, "b", 2.0))
+    env.process(proc(env, "a", 1.0))
+    env.process(proc(env, "c", 3.0))
+    env.run()
+    assert log == [(1.0, "a"), (2.0, "b"), (3.0, "c")]
+
+
+def test_fifo_same_time():
+    env = Environment()
+    log = []
+
+    def proc(env, name):
+        yield env.timeout(1.0)
+        log.append(name)
+
+    for n in "abc":
+        env.process(proc(env, n))
+    env.run()
+    assert log == ["a", "b", "c"]
+
+
+def test_process_return_value():
+    env = Environment()
+
+    def child(env):
+        yield env.timeout(5.0)
+        return 42
+
+    def parent(env, out):
+        val = yield env.process(child(env))
+        out.append((env.now, val))
+
+    out = []
+    env.process(parent(env, out))
+    env.run()
+    assert out == [(5.0, 42)]
+
+
+def test_store_blocking_get():
+    env = Environment()
+    store = env.store()
+    log = []
+
+    def consumer(env):
+        item = yield store.get()
+        log.append((env.now, item))
+
+    def producer(env):
+        yield env.timeout(3.0)
+        store.put("x")
+
+    env.process(consumer(env))
+    env.process(producer(env))
+    env.run()
+    assert log == [(3.0, "x")]
+
+
+def test_store_fifo_items_and_getters():
+    env = Environment()
+    store = env.store()
+    log = []
+
+    def consumer(env, name):
+        item = yield store.get()
+        log.append((name, item))
+
+    env.process(consumer(env, "c1"))
+    env.process(consumer(env, "c2"))
+
+    def producer(env):
+        yield env.timeout(1.0)
+        store.put(1)
+        store.put(2)
+
+    env.process(producer(env))
+    env.run()
+    assert log == [("c1", 1), ("c2", 2)]
+
+
+def test_resource_contention():
+    env = Environment()
+    res = env.resource(capacity=1)
+    log = []
+
+    def worker(env, name):
+        yield res.acquire()
+        log.append((env.now, name, "start"))
+        yield env.timeout(2.0)
+        res.release()
+        log.append((env.now, name, "end"))
+
+    env.process(worker(env, "a"))
+    env.process(worker(env, "b"))
+    env.run()
+    assert log == [
+        (0.0, "a", "start"),
+        (2.0, "a", "end"),
+        (2.0, "b", "start"),
+        (4.0, "b", "end"),
+    ]
+
+
+def test_resource_capacity_n():
+    env = Environment()
+    res = env.resource(capacity=2)
+    starts = []
+
+    def worker(env, name):
+        yield res.acquire()
+        starts.append((env.now, name))
+        yield env.timeout(1.0)
+        res.release()
+
+    for n in "abc":
+        env.process(worker(env, n))
+    env.run()
+    assert starts == [(0.0, "a"), (0.0, "b"), (1.0, "c")]
+
+
+def test_interrupt():
+    env = Environment()
+    log = []
+
+    def sleeper(env):
+        try:
+            yield env.timeout(100.0)
+            log.append("slept")
+        except Interrupt as it:
+            log.append(("interrupted", env.now, it.cause))
+
+    def interrupter(env, target):
+        yield env.timeout(1.0)
+        target.interrupt("wake")
+
+    p = env.process(sleeper(env))
+    env.process(interrupter(env, p))
+    env.run()
+    assert log == [("interrupted", 1.0, "wake")]
+
+
+def test_kill():
+    env = Environment()
+    log = []
+
+    def sleeper(env):
+        yield env.timeout(10.0)
+        log.append("should not happen")
+
+    p = env.process(sleeper(env))
+
+    def killer(env):
+        yield env.timeout(1.0)
+        p.kill()
+
+    env.process(killer(env))
+    env.run()
+    assert log == []
+    assert not p.is_alive
+
+
+def test_any_of():
+    env = Environment()
+    log = []
+
+    def proc(env):
+        idx, val = yield env.any_of([env.timeout(5.0, "slow"), env.timeout(2.0, "fast")])
+        log.append((env.now, idx, val))
+
+    env.process(proc(env))
+    env.run()
+    assert log == [(2.0, 1, "fast")]
+
+
+def test_run_until():
+    env = Environment()
+    ticks = []
+
+    def ticker(env):
+        while True:
+            yield env.timeout(1.0)
+            ticks.append(env.now)
+
+    env.process(ticker(env))
+    env.run(until=3.5)
+    assert ticks == [1.0, 2.0, 3.0]
+    assert env.now == 3.5
+
+
+def test_rng_determinism():
+    a = Environment(seed=7).rng("s").expovariate(1.0)
+    b = Environment(seed=7).rng("s").expovariate(1.0)
+    c = Environment(seed=8).rng("s").expovariate(1.0)
+    assert a == b
+    assert a != c
+
+
+def test_rng_stream_independence():
+    env = Environment(seed=1)
+    xs = [env.rng("x").random() for _ in range(3)]
+    env2 = Environment(seed=1)
+    _ = [env2.rng("y").random() for _ in range(5)]
+    xs2 = [env2.rng("x").random() for _ in range(3)]
+    assert xs == xs2
+
+
+def test_nested_process_failure_propagates_to_parent():
+    env = Environment()
+
+    def child(env):
+        yield env.timeout(1.0)
+        raise ValueError("boom")
+
+    def parent(env, log):
+        try:
+            yield env.process(child(env))
+        except ValueError as e:
+            log.append(str(e))
+
+    log = []
+    env.process(parent(env, log))
+    env.run()
+    assert log == ["boom"]
+
+
+def test_unobserved_process_failure_raises():
+    env = Environment()
+
+    def child(env):
+        yield env.timeout(1.0)
+        raise ValueError("boom")
+
+    env.process(child(env))
+    with pytest.raises(ValueError):
+        env.run()
