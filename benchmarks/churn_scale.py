@@ -1,0 +1,174 @@
+"""Churn-at-scale sweep: scheduler throughput across (workers x creation rate).
+
+The paper's headline numbers are churn numbers — 2500 sandbox creations/s on
+93 nodes, graceful degradation at 5000 workers (C1/C9). This benchmark keeps
+the perf trajectory honest on two axes at once:
+
+  * simulated sandbox throughput / latency per grid cell (the modeled
+    system), and
+  * wall-clock simulator events/s per cell (is Python the bottleneck, or
+    the model?);
+
+plus a placer microbenchmark that pits the incremental score index against
+the seed's brute-force full rescan at 5000 nodes — the asymptotic fix this
+sweep exists to protect.
+
+Emits ``BENCH_churn.json``. ``--smoke`` runs a seconds-scale subset (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+if __package__ in (None, ""):          # `python benchmarks/churn_scale.py`
+    import os
+    import sys
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)                        # the benchmarks package
+    sys.path.insert(0, os.path.join(_root, "src"))   # repro itself
+
+from benchmarks.common import (
+    SWEEP_SCALING, latency_stats, make_dirigent, preload_functions,
+    run_open_loop,
+)
+from repro.core.placement import Placer, make_placer
+from repro.simcore import Environment
+
+REQ_CPU, REQ_MEM = 100, 128         # SWEEP_SCALING request footprint
+
+
+def placer_microbench(n_nodes: int, n_ops: int, use_index: bool,
+                      policy: str = "balanced", churn: bool = True) -> dict:
+    """Wall-clock placements/s on a steady-churn workload: fill a warm pool,
+    then alternate release/place so every op hits a non-trivial index state."""
+    if policy == "partitioned":
+        placer = make_placer("partitioned", use_index=use_index)
+    else:
+        placer = Placer(policy, use_index=use_index)
+    for wid in range(n_nodes):
+        placer.add_node(wid, 4000, 8192)
+    warm = min(n_nodes * 4, n_ops)
+    placed = []
+    for _ in range(warm):
+        wid = placer.place(REQ_CPU, REQ_MEM)
+        if wid is not None:
+            placed.append(wid)
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        if churn and placed:
+            placer.release(placed[i % len(placed)], REQ_CPU, REQ_MEM)
+        wid = placer.place(REQ_CPU, REQ_MEM)
+        if churn and placed and wid is not None:
+            placed[i % len(placed)] = wid
+    wall = time.perf_counter() - t0
+    return {"n_nodes": n_nodes, "n_ops": n_ops, "policy": policy,
+            "use_index": use_index, "wall_s": round(wall, 4),
+            "places_per_s": round(n_ops / wall, 1)}
+
+
+def churn_point(n_workers: int, rate: float, duration: float,
+                seed: int = 71, placement_policy: str = "balanced") -> dict:
+    """One grid cell: the scalability.py cold-start churn workload, with
+    wall-clock accounting alongside the simulated latency stats."""
+    env = Environment(seed=seed)
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
+                       placement_policy=placement_policy)
+    plan = [(i / rate, f"f{i}", 0.05) for i in range(int(rate * duration))]
+    preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
+    ev0, t0 = env.events_processed, time.perf_counter()
+    invs = run_open_loop(env, cl, plan, until_extra=30.0)
+    wall = time.perf_counter() - t0
+    events = env.events_processed - ev0
+    stats = latency_stats(invs, "e2e_latency")
+    return {
+        "workers": n_workers, "rate": rate, "duration": duration,
+        "policy": placement_policy,
+        "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
+        "events": events, "events_per_wall_s": round(events / wall, 1),
+        "creations": cl.collector.sandbox_creations,
+        "creations_per_wall_s": round(cl.collector.sandbox_creations / wall, 1),
+        "done": stats["done"], "total": stats["total"],
+        "p50_ms": round(stats["p50"] * 1e3, 3),
+        "p99_ms": round(stats["p99"] * 1e3, 3),
+    }
+
+
+def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
+    with open(out, "a"):               # fail on an unwritable path up front,
+        pass                           # not after minutes of sweep
+    result = {"meta": {"bench": "churn_scale", "smoke": smoke},
+              "placer_microbench": [], "grid": []}
+
+    # -- placer microbench: incremental index vs seed brute-force rescan ----
+    micro_nodes = 1000 if smoke else 5000
+    micro_ops = 2000 if smoke else 20_000
+    brute_ops = 500 if smoke else 2000   # brute is slow; scale its op count
+    fast = placer_microbench(micro_nodes, micro_ops, use_index=True)
+    brute = placer_microbench(micro_nodes, brute_ops, use_index=False)
+    part = placer_microbench(micro_nodes, micro_ops, use_index=True,
+                             policy="partitioned")
+    speedup = fast["places_per_s"] / brute["places_per_s"]
+    result["placer_microbench"] = [fast, brute, part]
+    result["placer_index_speedup"] = round(speedup, 1)
+    print(f"placer@{micro_nodes}: index {fast['places_per_s']:.0f}/s, "
+          f"brute {brute['places_per_s']:.0f}/s, "
+          f"partitioned {part['places_per_s']:.0f}/s "
+          f"-> {speedup:.1f}x index speedup", flush=True)
+
+    # -- churn grid ---------------------------------------------------------
+    if smoke:
+        grid = [(93, 500, 1.0), (1000, 1000, 1.0)]
+    else:
+        grid = [(w, r, 4.0)
+                for w in (93, 1000, 2500, 5000)
+                for r in (1000, 2500)]
+    for n_workers, rate, duration in grid:
+        cell = churn_point(n_workers, rate, duration)
+        result["grid"].append(cell)
+        print(f"workers={n_workers} rate={rate}: "
+              f"{cell['events_per_wall_s']:.0f} ev/s wall, "
+              f"{cell['creations_per_wall_s']:.0f} creations/s wall, "
+              f"p99={cell['p99_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+
+    # partitioned-placer spot check at the largest scale in the grid
+    w, r, d = grid[-1]
+    cell = churn_point(w, r, d, placement_policy="partitioned")
+    result["grid"].append(cell)
+    print(f"workers={w} rate={r} policy=partitioned: "
+          f"{cell['events_per_wall_s']:.0f} ev/s wall, "
+          f"p99={cell['p99_ms']:.1f}ms done={cell['done']}/{cell['total']}",
+          flush=True)
+
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def run(reporter, quick: bool = True) -> dict:
+    """benchmarks/run.py harness adapter (CSV reporter contract)."""
+    result = run_bench(smoke=quick)
+    for row in result["placer_microbench"]:
+        tag = "partitioned" if row["policy"] == "partitioned" else (
+            "index" if row["use_index"] else "brute")
+        reporter.add(f"churn/placer-{tag}@{row['n_nodes']}",
+                     1e6 / max(row["places_per_s"], 1e-9),
+                     f"places_per_s={row['places_per_s']}")
+    for cell in result["grid"]:
+        reporter.add(
+            f"churn/workers={cell['workers']}/rate={cell['rate']}"
+            + ("" if cell["policy"] == "balanced" else f"/{cell['policy']}"),
+            cell["p50_ms"] * 1e3,
+            f"p99_ms={cell['p99_ms']};ev_per_wall_s={cell['events_per_wall_s']}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI")
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args()
+    run_bench(smoke=args.smoke, out=args.out)

@@ -14,7 +14,7 @@ from benchmarks.common import (
     run_open_loop,
 )
 from repro.core.abstractions import Sandbox, SandboxState
-from repro.simcore import Environment
+from repro.simcore import Environment, stable_hash
 
 EXEC_TIME = 0.3e-3   # hello-world
 N_FUNCTIONS = 30   # spread across DP replicas by function-hash steering
@@ -25,7 +25,7 @@ def _prescale_dirigent(cl, fn: str, n_sandboxes: int) -> None:
     leader = cl.control_plane_leader()
     st = leader.functions[fn]
     wids = list(cl.workers.keys())
-    base = abs(hash(fn)) % 10_000_000
+    base = stable_hash(fn) % 10_000_000
     for i in range(n_sandboxes):
         wid = wids[(base + i) % len(wids)]
         sb = Sandbox(sandbox_id=100000 + base + i, function_name=fn,
@@ -45,7 +45,7 @@ def _prescale_knative(kn, fn: str, n_sandboxes: int) -> None:
     from repro.core.baseline_knative import PodEndpoint
     st = kn.functions[fn]
     wids = list(kn.workers.keys())
-    base = abs(hash(fn)) % 10_000_000
+    base = stable_hash(fn) % 10_000_000
     for i in range(n_sandboxes):
         sb = Sandbox(sandbox_id=100000 + base + i, function_name=fn,
                      ip=(10, 0, 0, 1), port=80,

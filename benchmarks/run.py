@@ -23,9 +23,9 @@ def main() -> None:
     ap.add_argument("--skip", type=str, default="")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_burst, fig7_coldstart, fig8_warmstart,
-                            fig9_10_azure, fig11_failover, registration,
-                            scalability)
+    from benchmarks import (churn_scale, fig1_burst, fig7_coldstart,
+                            fig8_warmstart, fig9_10_azure, fig11_failover,
+                            registration, scalability)
     try:
         from benchmarks import kernel_bench
     except Exception:
@@ -38,6 +38,7 @@ def main() -> None:
         "fig11": fig11_failover,
         "registration": registration,
         "scalability": scalability,
+        "churn": churn_scale,
     }
     if kernel_bench is not None:
         modules["kernels"] = kernel_bench

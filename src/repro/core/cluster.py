@@ -27,7 +27,7 @@ from repro.core.metrics import Collector
 from repro.core.persistence import SimStore
 from repro.core.request import Invocation, InvocationMode
 from repro.core.worker import WorkerDaemon
-from repro.simcore import Environment, Event
+from repro.simcore import Environment, Event, stable_hash
 
 
 class Cluster:
@@ -176,7 +176,7 @@ class Cluster:
             inv.t_done = self.env.now
             self.collector.done(inv)
             return
-        idx = hash(inv.function_name) % len(self._lb_backends)
+        idx = stable_hash(inv.function_name) % len(self._lb_backends)
         dp = self.data_planes[self._lb_backends[idx]]
         if not dp.alive:
             inv.failed = True
@@ -212,7 +212,7 @@ class Cluster:
             alive = self.data_planes_alive()
             if not alive:
                 break
-            dp = alive[hash(inv.function_name) % len(alive)]
+            dp = alive[stable_hash(inv.function_name) % len(alive)]
             inv.failed = False
         yield from self.store.write(f"asyncq/{inv.inv_id}", None)
 

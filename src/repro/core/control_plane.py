@@ -19,8 +19,9 @@ structures, which is what degrades throughput at 5000 workers (C9).
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Generator, List, Optional, TYPE_CHECKING
+from typing import Deque, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
 
 from repro.core.abstractions import (
     Function, Sandbox, SandboxState, WorkerNodeInfo,
@@ -28,7 +29,7 @@ from repro.core.abstractions import (
 from repro.core.autoscaler import FunctionAutoscalerState
 from repro.core.costmodel import DirigentCosts
 from repro.core.metrics import Collector
-from repro.core.placement import Placer
+from repro.core.placement import make_placer
 from repro.simcore import Environment, Interrupt
 
 if TYPE_CHECKING:
@@ -66,11 +67,16 @@ class ControlPlane:
         self.workers: Dict[int, WorkerNodeInfo] = {}
         self.worker_last_hb: Dict[int, float] = {}
         self.placement_policy = placement_policy
-        self.placer = Placer(policy=placement_policy)
+        self.placer = make_placer(placement_policy)
         self._scale_lock = env.resource(capacity=1)
         self._sandbox_ids = itertools.count(1)
         self._loops = []
         self.no_downscale_until = 0.0
+        # coalescing CP -> DP endpoint-update buffer: updates queued in the
+        # same event-loop turn ride one batched broadcast (vs one serial
+        # grpc_call per DP per update on the creation critical path)
+        self._ep_updates: Deque[Tuple[str, str, object, bool]] = deque()
+        self._ep_flush_scheduled = False
 
     # -- lifecycle -----------------------------------------------------------------
     def start_leader(self) -> None:
@@ -86,6 +92,7 @@ class ControlPlane:
         for p in self._loops:
             p.kill()
         self._loops = []
+        self._ep_updates.clear()
 
     # -- user API --------------------------------------------------------------------
     def register_function(self, fn: Function) -> Generator:
@@ -94,10 +101,12 @@ class ControlPlane:
         yield from self.store.write(f"function/{fn.name}", fn.persisted_record())
         self.functions[fn.name] = FunctionState(
             function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
-        # propagate to data planes (one batched gRPC per DP)
-        for dp in self.cluster.data_planes_alive():
+        # propagate to data planes: one batched broadcast covers every DP
+        dps = self.cluster.data_planes_alive()
+        if dps:
             yield self.env.timeout(self.costs.grpc_call)
-            dp.sync_functions([fn.name])
+            for dp in dps:
+                dp.sync_functions([fn.name])
         return fn.name
 
     def deregister_function(self, name: str) -> Generator:
@@ -142,6 +151,27 @@ class ControlPlane:
             st = self.functions.get(fn)
             if st is not None:
                 st.autoscaler.record_metric(self.env.now, float(inflight))
+
+    def report_dead_sandbox(self, fn: str, sandbox_id: int) -> Generator:
+        """A DP dispatched to a sandbox that is gone (killed behind our back,
+        e.g. torn down by a deposed leader, or lost with its node). Reconcile
+        it out of the cluster state so routing and capacity self-heal —
+        sandbox state is reconstructed from cluster signals, never trusted
+        blindly (paper §3.4)."""
+        yield self.env.timeout(self.costs.grpc_call)   # DP -> CP report
+        if not (self.alive and self.is_leader):
+            return
+        st = self.functions.get(fn)
+        if st is None:
+            return
+        sb = st.sandboxes.pop(sandbox_id, None)
+        if sb is None:
+            return
+        self.placer.release(sb.worker_id,
+                            st.function.scaling.cpu_req_millis,
+                            st.function.scaling.mem_req_mb)
+        self._queue_endpoint_update("remove", fn, sandbox_id, drain=False)
+        yield from self._reconcile_function(fn, st)
 
     def heartbeat(self, worker_id: int) -> None:
         """Worker heartbeat. Touches the shared health/state structures."""
@@ -226,15 +256,21 @@ class ControlPlane:
                 return
             yield self.env.timeout(self.costs.grpc_call)   # ready notification
             if not (self.alive and self.is_leader):
+                # leadership lost while the worker booted: this replica's
+                # in-memory view is dead weight — undo the placement commit
+                # and drop the CREATING record so capacity stays exact
+                st.sandboxes.pop(sb.sandbox_id, None)
+                self.placer.release(wid, fn.scaling.cpu_req_millis,
+                                    fn.scaling.mem_req_mb)
                 return
             sb.state = SandboxState.READY
             self.collector.sandbox_creations += 1
             self.collector.event(self.env.now, "sandbox-created", fn.name)
-            # in-memory state update + endpoint broadcast to DPs
+            # in-memory state update; the endpoint rides the next coalesced
+            # broadcast (one batched grpc_call for all DPs and all updates
+            # queued this turn)
             yield self.env.timeout(self.costs.channel_op)
-            for dp in self.cluster.data_planes_alive():
-                yield self.env.timeout(self.costs.grpc_call)
-                dp.add_endpoint(fn.name, sb)
+            self._queue_endpoint_update("add", fn.name, sb)
         finally:
             st.creating = max(0, st.creating - 1)
 
@@ -243,12 +279,15 @@ class ControlPlane:
         # latency-critical path (paper §4 "Sandbox teardown") — it does not
         # contend the scale lock
         yield self.env.timeout(self.costs.channel_op)
+        if st.sandboxes.pop(sb.sandbox_id, None) is None:
+            # a concurrent remover (dead-sandbox report, worker eviction,
+            # another reconcile) already took it: releasing again would
+            # free phantom capacity and overcommit the node
+            return
         sb.state = SandboxState.TERMINATING
-        st.sandboxes.pop(sb.sandbox_id, None)
         if self.persist_sandbox_state:
             yield from self.store.write(f"sandbox/{sb.key}", None)
-        for dp in self.cluster.data_planes_alive():
-            dp.remove_endpoint(st.function.name, sb.sandbox_id)
+        self._queue_endpoint_update("remove", st.function.name, sb.sandbox_id)
         worker = self.cluster.worker_by_id(sb.worker_id)
         if worker is not None:
             # drain grace: in-flight requests already dispatched to this
@@ -262,6 +301,37 @@ class ControlPlane:
                             st.function.scaling.cpu_req_millis,
                             st.function.scaling.mem_req_mb)
         self.collector.sandbox_teardowns += 1
+
+    # -- CP -> DP endpoint propagation (coalesced) ------------------------------------------------
+    def _queue_endpoint_update(self, op: str, fn: str, payload,
+                               drain: bool = True) -> None:
+        """Buffer an endpoint add/remove; every update queued in the same
+        event-loop turn shares one batched broadcast to all DPs."""
+        self._ep_updates.append((op, fn, payload, drain))
+        if not self._ep_flush_scheduled:
+            self._ep_flush_scheduled = True
+            self.env.process(self._flush_endpoint_updates(),
+                             name=f"cp{self.cp_id}-ep-flush")
+
+    def _flush_endpoint_updates(self) -> Generator:
+        yield self.env.timeout(self.costs.grpc_call)   # one batched broadcast
+        updates, self._ep_updates = self._ep_updates, deque()
+        self._ep_flush_scheduled = False
+        if not self.alive:
+            return
+        dps = self.cluster.data_planes_alive()
+        for op, fn, payload, drain in updates:
+            if op == "add":
+                # a dethroned leader must not introduce endpoints...
+                if self.is_leader:
+                    for dp in dps:
+                        dp.add_endpoint(fn, payload)
+            else:
+                # ...but removes are always safe: the sandbox is being killed
+                # regardless, and dropping them here would strand a dead
+                # endpoint in the DP caches
+                for dp in dps:
+                    dp.remove_endpoint(fn, payload, drain=drain)
 
     # -- health monitoring -----------------------------------------------------------------------
     def _health_loop(self) -> Generator:
@@ -282,10 +352,8 @@ class ControlPlane:
             for sb in [s for s in st.sandboxes.values() if s.worker_id == wid]:
                 st.sandboxes.pop(sb.sandbox_id, None)
                 affected.append((fn, sb.sandbox_id))
-        for dp in self.cluster.data_planes_alive():
-            yield self.env.timeout(self.costs.grpc_call)
-            for fn, sid in affected:
-                dp.remove_endpoint(fn, sid, drain=False)
+        for fn, sid in affected:
+            self._queue_endpoint_update("remove", fn, sid, drain=False)
         self.collector.event(self.env.now, "worker-evicted", wid)
         # re-run autoscaling promptly to replace lost capacity
         for fn, st in list(self.functions.items()):
@@ -309,7 +377,7 @@ class ControlPlane:
             self.functions[fn.name] = FunctionState(
                 function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
         self.workers = {}
-        self.placer = Placer(policy=self.placement_policy)
+        self.placer = make_placer(self.placement_policy)
         for key, rec in worker_records.items():
             info = WorkerNodeInfo.from_record(rec)
             self.workers[info.worker_id] = info
@@ -341,5 +409,4 @@ class ControlPlane:
             st.sandboxes[sb.sandbox_id] = sb
             self.placer.commit(wid, st.function.scaling.cpu_req_millis,
                                st.function.scaling.mem_req_mb)
-            for dp in self.cluster.data_planes_alive():
-                dp.add_endpoint(sb.function_name, sb)
+            self._queue_endpoint_update("add", sb.function_name, sb)

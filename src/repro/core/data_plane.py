@@ -15,8 +15,9 @@ of a function land on one DP replica and in-flight accounting is centralized.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Generator, List, Optional, TYPE_CHECKING
+from typing import Deque, Dict, Generator, List, Optional, TYPE_CHECKING
 
 from repro.core.abstractions import Sandbox
 from repro.core.costmodel import DirigentCosts
@@ -44,7 +45,7 @@ class Endpoint:
 @dataclass
 class FunctionTable:
     endpoints: Dict[int, Endpoint] = field(default_factory=dict)
-    queue: List[Invocation] = field(default_factory=list)
+    queue: Deque[Invocation] = field(default_factory=deque)
     inflight: int = 0           # executing + queued (the autoscaling signal)
     creating_hint: int = 0      # CP-echoed count (metric freshness only)
 
@@ -181,6 +182,11 @@ class DataPlane:
                     idx, val = yield self.env.any_of(
                         [primary, self.env.timeout(self.hedge_after)])
                     if idx == 0:
+                        # a failed process delivers its exception as the
+                        # any_of VALUE — re-raise so failures are handled,
+                        # not returned as results
+                        if not primary.ok:
+                            raise val
                         inv.result = val
                     else:
                         hedge_ep = self._pick_endpoint(
@@ -198,15 +204,30 @@ class DataPlane:
                                 name=f"hedge-{inv.inv_id}")
                             idx2, val2 = yield self.env.any_of(
                                 [primary, backup])
-                            inv.result = val2
-                            if idx2 == 1:
-                                self.hedge_wins += 1
-                                primary.kill()
+                            winner, w_ep, loser, l_ep = (
+                                (primary, ep, backup, hedge_ep) if idx2 == 0
+                                else (backup, hedge_ep, primary, ep))
+                            if winner.ok:
+                                inv.result = val2
+                                if idx2 == 1:
+                                    self.hedge_wins += 1
+                                loser.kill()
                             else:
-                                backup.kill()
+                                # winner died (its sandbox is gone): heal it
+                                # and fall back to the surviving attempt
+                                self._report_dead_endpoint(
+                                    inv.function_name, w_ep)
+                                try:
+                                    inv.result = yield loser
+                                except RuntimeError as e2:
+                                    inv.failed = True
+                                    inv.failure_reason = str(e2)
+                                    self._report_dead_endpoint(
+                                        inv.function_name, l_ep)
             except RuntimeError as e:
                 inv.failed = True
                 inv.failure_reason = str(e)
+                self._report_dead_endpoint(inv.function_name, ep)
             yield self.env.timeout(
                 c.grpc_call * self._rng.lognormal(1.0, c.hop_jitter_sigma))
         finally:
@@ -220,6 +241,19 @@ class DataPlane:
         if hedge_ep is not None:
             self._release_slot(tbl, hedge_ep)
         self._release_slot(tbl, ep)
+
+    def _report_dead_endpoint(self, fn: str, ep: Endpoint) -> None:
+        """Dispatch hit a dead sandbox: stop routing to it and tell the CP so
+        cluster state (capacity, replacement scaling) reconciles — a stale
+        endpoint must cost one failed request, not an endless stream."""
+        ep.draining = True          # skipped by the LB; reaped on last release
+        if not self.alive:
+            return
+        cp = self.cluster.control_plane_leader()
+        if cp is not None:
+            self.env.process(
+                cp.report_dead_sandbox(fn, ep.sandbox.sandbox_id),
+                name="dead-ep-report")
 
     def _release_slot(self, tbl: FunctionTable, ep: Endpoint) -> None:
         ep.in_use -= 1
@@ -238,7 +272,7 @@ class DataPlane:
             ep = self._pick_endpoint(tbl, fn=head.function_name)
             if ep is None:
                 return
-            inv = tbl.queue.pop(0)
+            inv = tbl.queue.popleft()
             inv._waiter.succeed(ep)   # type: ignore[attr-defined]
 
     # -- metrics -------------------------------------------------------------------

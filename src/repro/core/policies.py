@@ -11,7 +11,9 @@ relevant Go interfaces" — this module is that interface surface, in Python:
   * placement (control plane): ``balanced`` (kube-scheduler default, used by
     every benchmark), ``hermod_packing`` (Hermod's hybrid: pack onto the
     busiest node that still fits, keeping other nodes free for bursts),
-    ``random``.
+    ``random``; plus ``partitioned`` (Archipelago-style sharded placement for
+    the 5000-worker regime — a placer structure, not a scoring function; see
+    core/placement.py).
 
 Benchmarks keep the Knative-default policies for paper fidelity; the
 policies here are selectable via ``Cluster(lb_policy=...)`` /
@@ -102,6 +104,11 @@ def place_hermod(node, cpu: int, mem: int) -> float:
 def place_random(node, cpu: int, mem: int, _state={"n": 0}) -> float:
     _state["n"] = (_state["n"] * 1103515245 + 12345) % (1 << 31)
     return _state["n"] / float(1 << 31)
+
+
+# call-order-dependent scoring cannot be cached in the placer's incremental
+# index (core/placement.py falls back to the brute-force scan)
+place_random.stateful = True
 
 
 PLACEMENT_POLICIES = {

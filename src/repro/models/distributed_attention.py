@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.models.sharding import compat_shard_map, get_abstract_mesh
+
 NEG_INF = -1e30
 
 
@@ -33,7 +35,7 @@ def decode_attention_seq_sharded(q, k_cache, v_cache, k_new, v_new,
                                  data_axes: tuple):
     """q: (B,1,Hq,D); caches: (B,Smax,Hkv,D) seq-sharded over model_axis;
     k_new/v_new: (B,1,Hkv,D). Returns (o, ck_updated, cv_updated)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     b, _, hq, d = q.shape
     hkv = k_cache.shape[2]
@@ -79,7 +81,7 @@ def decode_attention_seq_sharded(q, k_cache, v_cache, k_new, v_new,
         out = out.transpose(0, 3, 1, 2, 4).reshape(b_l, 1, hq, d)
         return out.astype(q_l.dtype), ck_l, cv_l
 
-    o, ck, cv = jax.shard_map(
+    o, ck, cv = compat_shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(bspec, None, None, None),            # q: replicated over m
                   P(bspec, model_axis, None, None),      # caches: seq sharded
@@ -90,7 +92,6 @@ def decode_attention_seq_sharded(q, k_cache, v_cache, k_new, v_new,
         out_specs=(P(bspec, None, None, None),
                    P(bspec, model_axis, None, None),
                    P(bspec, model_axis, None, None)),
-        check_vma=False,
     )(q, k_cache, v_cache, k_new, v_new,
       jnp.asarray(cache_len, jnp.int32))
     return o, ck, cv

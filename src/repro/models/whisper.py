@@ -20,6 +20,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.simcore import stable_hash
 from repro.models import layers as L
 from repro.models.api import RunConfig
 from repro.models.sharding import constrain
@@ -120,7 +121,7 @@ class WhisperModel:
         specs = self.param_specs()
 
         def init_leaf(path, s):
-            key = jax.random.fold_in(rng, abs(hash(path)) % (2**31))
+            key = jax.random.fold_in(rng, stable_hash(path))
             name = path.split("/")[-1]
             if "ln" in name and not name.endswith("b"):
                 return jnp.ones(s.shape, s.dtype)

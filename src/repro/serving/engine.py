@@ -36,6 +36,7 @@ def sample_token(logits: jax.Array, rng: Optional[jax.Array] = None,
     if top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
+    # categorical draws full-shape Gumbel noise: rows sample independently
     return jax.random.categorical(rng, logits).astype(jnp.int32)
 
 

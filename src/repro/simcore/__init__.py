@@ -8,6 +8,7 @@ from repro.simcore.engine import (
     RngStream,
     Store,
     Timeout,
+    stable_hash,
 )
 
 __all__ = [
@@ -20,4 +21,5 @@ __all__ = [
     "RngStream",
     "Store",
     "Timeout",
+    "stable_hash",
 ]

@@ -18,8 +18,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import zlib
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Generator, Optional
+from typing import Any, Callable, Deque, Generator, Optional
 
 import numpy as np
 
@@ -48,6 +50,13 @@ class Event:
         self.triggered = False
         self.fired = False
         self.callbacks: list[Callable[["Event"], None]] = []
+
+    @property
+    def ok(self) -> bool:
+        """False iff the event has failed. With ``any_of`` the loser's
+        exception arrives as the *value*; check the winner's ``ok`` before
+        trusting it."""
+        return self._ok
 
     def succeed(self, value: Any = None) -> "Event":
         if self.triggered:
@@ -222,12 +231,12 @@ class Store:
 
     def __init__(self, env: "Environment"):
         self.env = env
-        self.items: list[Any] = []
-        self._getters: list[Event] = []
+        self.items: Deque[Any] = deque()
+        self._getters: Deque[Event] = deque()
 
     def put(self, item: Any) -> None:
         if self._getters:
-            evt = self._getters.pop(0)
+            evt = self._getters.popleft()
             evt.succeed(item)
         else:
             self.items.append(item)
@@ -235,7 +244,7 @@ class Store:
     def get(self) -> Event:
         evt = Event(self.env)
         if self.items:
-            evt.succeed(self.items.pop(0))
+            evt.succeed(self.items.popleft())
         else:
             self._getters.append(evt)
         return evt
@@ -251,7 +260,7 @@ class Resource:
         self.env = env
         self.capacity = capacity
         self.in_use = 0
-        self._waiters: list[Event] = []
+        self._waiters: Deque[Event] = deque()
 
     def acquire(self) -> Event:
         evt = Event(self.env)
@@ -264,7 +273,7 @@ class Resource:
 
     def release(self) -> None:
         if self._waiters:
-            evt = self._waiters.pop(0)
+            evt = self._waiters.popleft()
             evt.succeed(None)
         else:
             self.in_use -= 1
@@ -301,6 +310,12 @@ class RngStream:
         return float(self.rng.random())
 
 
+def stable_hash(name: str) -> int:
+    """Process-independent string hash (builtin ``hash`` is salted per
+    process and must never feed simulation state)."""
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
+
+
 class Environment:
     """The event loop. Time is float seconds."""
 
@@ -310,15 +325,18 @@ class Environment:
         self._seq = itertools.count()
         self._seed = seed
         self._streams: dict[str, RngStream] = {}
+        self.events_processed = 0   # wall-clock throughput accounting
 
     # -- rng ---------------------------------------------------------------
     def rng(self, name: str) -> RngStream:
         if name not in self._streams:
-            # independent child stream per name, derived from the seed
+            # independent child stream per name, derived from the seed via a
+            # stable hash — builtin hash() is salted per process
+            # (PYTHONHASHSEED), which silently broke cross-process
+            # reproducibility of every benchmark
             ss = np.random.SeedSequence(self._seed)
             child = np.random.SeedSequence(
-                entropy=ss.entropy, spawn_key=(abs(hash(name)) % (2**31),)
-            )
+                entropy=ss.entropy, spawn_key=(stable_hash(name),))
             self._streams[name] = RngStream(np.random.default_rng(child))
         return self._streams[name]
 
@@ -353,6 +371,7 @@ class Environment:
                 return
             heapq.heappop(self._heap)
             self.now = t
+            self.events_processed += 1
             fn()
         if until is not None:
             self.now = until
@@ -365,6 +384,7 @@ class Environment:
             if t > hard_limit:
                 raise RuntimeError("run_until_event exceeded hard limit")
             self.now = t
+            self.events_processed += 1
             fn()
         if not evt.fired:
             raise RuntimeError("event never triggered")

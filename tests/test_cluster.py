@@ -80,6 +80,32 @@ def test_sandbox_concurrency_throttling():
     assert all(not i.failed for i in invs)
 
 
+def test_teardown_idempotent_after_concurrent_removal():
+    """Regression: tearing down a sandbox a concurrent remover (dead-sandbox
+    report, eviction) already reconciled away must not release placer
+    capacity a second time — phantom free capacity overcommits the node."""
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(stable_window=300,
+                                                    scale_to_zero_grace=300)))
+    cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    leader = cl.control_plane_leader()
+    st = leader.functions["f"]
+    sb = next(iter(st.sandboxes.values()))
+    st.sandboxes.pop(sb.sandbox_id)        # concurrent remover got there first
+    node = leader.placer.nodes[sb.worker_id]
+    before = (node.cpu_used, node.mem_used)
+    teardowns = cl.collector.sandbox_teardowns
+    env.process(leader._teardown_sandbox(st, sb), name="late-teardown")
+    env.run(until=env.now + 2.0)
+    # the sandbox's own node keeps its commitment (the concurrent remover
+    # owns the release); a double release would zero it out. The autoscaler
+    # may meanwhile place a replacement on OTHER (less-utilized) nodes.
+    assert (node.cpu_used, node.mem_used) == before
+    assert cl.collector.sandbox_teardowns == teardowns
+
+
 def test_async_invocation_at_least_once():
     env, cl = make_cluster()
     cl.register_sync(Function(name="f", image_url="i", port=80))

@@ -51,6 +51,86 @@ def test_cp_failover_preserves_functions_and_rebuilds_sandboxes():
     assert not warm.failed and not warm.cold
 
 
+def test_leadership_loss_midboot_releases_placer_capacity():
+    """Regression: losing leadership after the worker booted used to leak
+    placer capacity and leave a CREATING sandbox in FunctionState.sandboxes
+    (the early-return in _create_sandbox skipped cleanup)."""
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    old = cl.control_plane_leader()
+    cl.invoke("f", exec_time=0.01)
+    env.run(until=env.now + 0.02)     # placed, worker still booting
+    st = old.functions["f"]
+    assert st.creating == 1
+    assert any(n.cpu_used > 0 for n in old.placer.nodes.values())
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 1.0)      # boot completes after leadership loss
+    assert all(n.cpu_used == 0 and n.mem_used == 0
+               for n in old.placer.nodes.values())
+    assert st.sandboxes == {}         # no CREATING orphan left behind
+    assert st.creating == 0
+
+
+def test_stale_endpoint_self_heals_after_one_failure():
+    """A sandbox killed behind the control plane's back costs one failed
+    request: the DP evicts the endpoint, reports it, and the CP reconciles
+    capacity + replacement — not an endless failure stream."""
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(stable_window=300,
+                                                    scale_to_zero_grace=300)))
+    first = cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    assert not first.failed
+    leader = cl.control_plane_leader()
+    sb = next(iter(leader.functions["f"].sandboxes.values()))
+    # kill the sandbox on the worker without telling CP or DPs
+    cl.workers[sb.worker_id].sandboxes.pop(sb.sandbox_id)
+    bad = cl.invoke("f", exec_time=0.01)
+    env.run(until=10.0)
+    assert bad.failed and "gone" in bad.failure_reason
+    # endpoint evicted everywhere; CP forgot the sandbox and freed capacity
+    assert all(sb.sandbox_id not in dp.tables["f"].endpoints
+               for dp in cl.data_planes if "f" in dp.tables)
+    assert sb.sandbox_id not in leader.functions["f"].sandboxes
+    # traffic recovers on the replacement sandbox
+    later = cl.invoke("f", exec_time=0.01)
+    env.run(until=25.0)
+    assert not later.failed
+
+
+def test_hedged_dispatch_heals_dead_sandbox():
+    """Regression: hedged dispatch used to deliver a failed attempt's
+    exception as the request RESULT (any_of swallows child failure), never
+    reporting the dead endpoint. Now the dead side is healed and the
+    surviving attempt serves the request."""
+    env, cl = make_cluster(hedge_after=0.1)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(target_concurrency=1,
+                                                    stable_window=300,
+                                                    scale_to_zero_grace=300)))
+    warm = [cl.invoke("f", exec_time=1.0) for _ in range(2)]
+    env.run(until=10.0)
+    leader = cl.control_plane_leader()
+    sbs = list(leader.functions["f"].sandboxes.values())
+    assert len(sbs) >= 2
+    dead = sbs[0]
+    cl.workers[dead.worker_id].sandboxes.pop(dead.sandbox_id)
+    invs = [cl.invoke("f", exec_time=0.05) for _ in range(4)]
+    env.run(until=20.0)
+    # the dead sandbox is reconciled out of CP state and all DP caches
+    assert dead.sandbox_id not in leader.functions["f"].sandboxes
+    assert all(dead.sandbox_id not in dp.tables["f"].endpoints
+               for dp in cl.data_planes if "f" in dp.tables)
+    # at most the first dispatch onto the dead endpoint fails; no result may
+    # ever be an exception object (the old any_of-swallowing bug)
+    assert sum(1 for i in invs if i.failed) <= 1
+    assert all(not isinstance(i.result, BaseException) for i in invs)
+    late = cl.invoke("f", exec_time=0.05)
+    env.run(until=30.0)
+    assert not late.failed
+
+
 def test_warm_traffic_survives_cp_outage():
     """Warm invocations need no control plane (paper §3.4.1)."""
     env, cl = make_cluster(n_control_planes=1)   # no standby -> no recovery

@@ -59,6 +59,54 @@ def test_balanced_spreads_load():
     assert len(set(picks)) == 3      # spreads across nodes
 
 
+def test_placer_node_readd_no_stale_scores():
+    """Regression: removing a node then re-registering its id (node replaced
+    with different capacity) must not resurrect index entries scored against
+    the old incarnation."""
+    a = Placer("balanced", use_index=True)
+    b = Placer("balanced", use_index=False)
+    for p in (a, b):
+        p.add_node(1, 1000, 1000)
+        p.add_node(2, 1000, 1000)
+    assert a.place(100, 100) == b.place(100, 100)
+    for p in (a, b):
+        p.remove_node(2)
+        p.add_node(2, 300, 300)      # same id, smaller node
+    for _ in range(4):
+        assert a.place(100, 100) == b.place(100, 100)
+
+
+def test_partitioned_placer_shard_rotation_and_fallback():
+    from repro.core.placement import make_placer
+    p = make_placer("partitioned", n_shards=4)
+    for i in range(8):
+        p.add_node(i, 1000, 1000)
+    picks = [p.place(100, 100) for _ in range(8)]
+    assert None not in picks
+    # round-robin cursor touches every shard
+    assert {w % 4 for w in picks} == {0, 1, 2, 3}
+    # fill shard 0 completely; placements fall through to other shards
+    for w in (0, 4):
+        while p.nodes[w].fits(100, 100):
+            p.commit(w, 100, 100)
+    for _ in range(8):
+        w = p.place(100, 100)
+        assert w is not None and w % 4 != 0
+
+
+def test_cluster_runs_with_partitioned_placement():
+    env = Environment(seed=9)
+    cl = Cluster(env, n_workers=16, placement_policy="partitioned")
+    cl.start()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(stable_window=60,
+                                                    scale_to_zero_grace=60)))
+    invs = [cl.invoke("f", exec_time=0.5) for _ in range(6)]
+    env.run(until=20.0)
+    assert all(not i.failed for i in invs)
+    assert cl.control_plane_leader().functions["f"].ready_count >= 1
+
+
 def test_cluster_runs_with_alternate_policies():
     env = Environment(seed=5)
     cl = Cluster(env, n_workers=6, lb_policy="ch_rlu",

@@ -1,10 +1,13 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.abstractions import Function, Sandbox, SandboxState, ScalingConfig
 from repro.core.autoscaler import FunctionAutoscalerState
-from repro.core.placement import Placer
+from repro.core.placement import Placer, make_placer
 from repro.core.baseline_knative import TokenBucket
 from repro.simcore import Environment
 
@@ -79,6 +82,86 @@ def test_placement_never_overcommits(reqs, n_nodes):
     assert sum(c for _, c, _ in placed) == sum(n.cpu_used
                                                for n in p.nodes.values())
     # release restores to zero
+    for wid, cpu, mem in placed:
+        p.release(wid, cpu, mem)
+    assert all(n.cpu_used == 0 and n.mem_used == 0 for n in p.nodes.values())
+
+
+_REQ_SIZES = [(100, 128), (250, 512), (1000, 2048), (2000, 4096)]
+
+
+@given(caps=st.lists(st.tuples(st.integers(500, 8000),
+                               st.integers(512, 16384)),
+                     min_size=1, max_size=30),
+       ops=st.lists(st.one_of(
+           st.tuples(st.just("place"), st.sampled_from(_REQ_SIZES)),
+           st.tuples(st.just("release"), st.integers(0, 2**31)),
+           st.tuples(st.just("sched"), st.integers(0, 29)),
+           st.tuples(st.just("readd"),
+                     st.tuples(st.integers(0, 29), st.integers(500, 8000),
+                               st.integers(512, 16384))),
+       ), min_size=1, max_size=120),
+       policy=st.sampled_from(["balanced", "hermod_packing"]))
+@settings(max_examples=60)
+def test_placer_index_matches_brute_force(caps, ops, policy):
+    """The incremental score index must reproduce the brute-force scan
+    bit-for-bit: same winner (including the lowest-id tie-break) on every
+    placement of an arbitrary interleaving of place/release/schedulability
+    operations over random node sets."""
+    fast = Placer(policy, use_index=True)
+    ref = Placer(policy, use_index=False)
+    assert fast.use_index and not ref.use_index
+    for i, (c, m) in enumerate(caps):
+        fast.add_node(i, c, m)
+        ref.add_node(i, c, m)
+    placed = []
+    for op, arg in ops:
+        if op == "place":
+            cpu, mem = arg
+            got, want = fast.place(cpu, mem), ref.place(cpu, mem)
+            assert got == want
+            if got is not None:
+                placed.append((got, cpu, mem))
+        elif op == "release" and placed:
+            wid, cpu, mem = placed.pop(arg % len(placed))
+            fast.release(wid, cpu, mem)
+            ref.release(wid, cpu, mem)
+        elif op == "sched":
+            wid = arg % len(caps)
+            ok = arg % 2 == 0
+            fast.set_schedulable(wid, ok)
+            ref.set_schedulable(wid, ok)
+        elif op == "readd":
+            wid, c, m = arg[0] % len(caps), arg[1], arg[2]
+            placed = [p for p in placed if p[0] != wid]
+            fast.remove_node(wid)
+            ref.remove_node(wid)
+            fast.add_node(wid, c, m)
+            ref.add_node(wid, c, m)
+    for i in range(len(caps)):
+        assert (fast.nodes[i].cpu_used, fast.nodes[i].mem_used) == \
+               (ref.nodes[i].cpu_used, ref.nodes[i].mem_used)
+
+
+@given(reqs=st.lists(st.tuples(st.integers(50, 2000), st.integers(64, 2048)),
+                     min_size=1, max_size=60),
+       n_nodes=st.integers(1, 24), n_shards=st.integers(1, 8))
+@settings(max_examples=40)
+def test_partitioned_placer_never_overcommits(reqs, n_nodes, n_shards):
+    p = make_placer("partitioned", n_shards=n_shards)
+    for i in range(n_nodes):
+        p.add_node(i, 4000, 8192)
+    placed = []
+    for cpu, mem in reqs:
+        wid = p.place(cpu, mem)
+        if wid is not None:
+            placed.append((wid, cpu, mem))
+    for i in range(n_nodes):
+        node = p.nodes[i]
+        assert node.cpu_used <= node.cpu_capacity
+        assert node.mem_used <= node.mem_capacity
+    assert sum(c for _, c, _ in placed) == sum(n.cpu_used
+                                               for n in p.nodes.values())
     for wid, cpu, mem in placed:
         p.release(wid, cpu, mem)
     assert all(n.cpu_used == 0 and n.mem_used == 0 for n in p.nodes.values())

@@ -200,6 +200,38 @@ def test_run_until():
     assert env.now == 3.5
 
 
+def test_cross_process_determinism():
+    """Simulation state must not depend on the per-process hash salt:
+    identical seeds give identical results under different PYTHONHASHSEED
+    (regression for builtin hash() feeding RNG streams and DP steering)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parents[1]
+    code = (
+        "from repro.core import Cluster, Function\n"
+        "from repro.simcore import Environment\n"
+        "env = Environment(seed=3)\n"
+        "cl = Cluster(env, n_workers=4)\n"
+        "cl.start()\n"
+        "cl.register_sync(Function(name='fn-det', image_url='i', port=80))\n"
+        "invs = [cl.invoke('fn-det', exec_time=0.01) for _ in range(5)]\n"
+        "env.run(until=10.0)\n"
+        "print([round(i.e2e_latency, 12) for i in invs])\n"
+    )
+    outs = []
+    for salt in ("1", "2"):
+        r = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            env=dict(os.environ, PYTHONHASHSEED=salt,
+                     PYTHONPATH=str(root / "src")),
+            cwd=str(root), timeout=120)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+
+
 def test_rng_determinism():
     a = Environment(seed=7).rng("s").expovariate(1.0)
     b = Environment(seed=7).rng("s").expovariate(1.0)
