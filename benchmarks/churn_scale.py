@@ -11,9 +11,17 @@ the perf trajectory honest on two axes at once:
 
 plus a placer microbenchmark that pits the incremental score index against
 the seed's brute-force full rescan at 5000 nodes — the asymptotic fix this
-sweep exists to protect.
+sweep exists to protect,
 
-Emits ``BENCH_churn.json``. ``--smoke`` runs a seconds-scale subset (CI).
+plus a control-plane shard sweep at the 5000-worker regime: the same churn
+workload against ``cp_shards`` in {1, 2, 4, ...}. With one shard the modeled
+scale lock caps creations at ~2700/s (C1) and 5000 workers' heartbeats eat
+into that budget (C9); the sweep records how modeled creation throughput,
+tail latency and accumulated lock-convoy time move as the CP is partitioned
+(core/control_plane.py).
+
+Emits ``BENCH_churn.json`` (schema in docs/benchmarks.md). ``--smoke`` runs
+a seconds-scale subset (CI).
 """
 from __future__ import annotations
 
@@ -68,12 +76,14 @@ def placer_microbench(n_nodes: int, n_ops: int, use_index: bool,
 
 
 def churn_point(n_workers: int, rate: float, duration: float,
-                seed: int = 71, placement_policy: str = "balanced") -> dict:
+                seed: int = 71, placement_policy: str = "balanced",
+                cp_shards: int = 1) -> dict:
     """One grid cell: the scalability.py cold-start churn workload, with
     wall-clock accounting alongside the simulated latency stats."""
     env = Environment(seed=seed)
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
-                       placement_policy=placement_policy)
+                       placement_policy=placement_policy,
+                       cp_shards=cp_shards)
     plan = [(i / rate, f"f{i}", 0.05) for i in range(int(rate * duration))]
     preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
     ev0, t0 = env.events_processed, time.perf_counter()
@@ -81,13 +91,26 @@ def churn_point(n_workers: int, rate: float, duration: float,
     wall = time.perf_counter() - t0
     events = env.events_processed - ev0
     stats = latency_stats(invs, "e2e_latency")
+    # modeled autoscale/reconcile throughput: creations per *simulated*
+    # second over the window creations actually happened in — this is the
+    # C1 ceiling the CP shards raise (wall-clock columns answer the separate
+    # "is Python the bottleneck" question)
+    created_ts = [t for t, k, _ in cl.collector.events
+                  if k == "sandbox-created"]
+    span = (created_ts[-1] - created_ts[0]) if len(created_ts) > 1 else 0.0
+    leader = cl.control_plane_leader()
     return {
         "workers": n_workers, "rate": rate, "duration": duration,
-        "policy": placement_policy,
+        "policy": placement_policy, "cp_shards": cp_shards,
         "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
         "events": events, "events_per_wall_s": round(events / wall, 1),
         "creations": cl.collector.sandbox_creations,
         "creations_per_wall_s": round(cl.collector.sandbox_creations / wall, 1),
+        "creations_per_sim_s": (round((len(created_ts) - 1) / span, 1)
+                                if span > 0 else None),
+        "reconciles": cl.collector.reconciles,
+        "lock_wait_sim_s": (round(sum(s.lock_wait_s for s in leader.shards), 4)
+                            if leader else None),
         "done": stats["done"], "total": stats["total"],
         "p50_ms": round(stats["p50"] * 1e3, 3),
         "p99_ms": round(stats["p99"] * 1e3, 3),
@@ -141,6 +164,24 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
           f"p99={cell['p99_ms']:.1f}ms done={cell['done']}/{cell['total']}",
           flush=True)
 
+    # -- control-plane shard sweep (the C1/C9 regime) -----------------------
+    # one scale-lock's modeled budget is ~2700 creations/s minus the
+    # heartbeat tax; drive at and beyond it and watch the shards divide it
+    if smoke:
+        shard_cells = [(1000, 2000.0, 1.0, s) for s in (1, 4)]
+    else:
+        shard_cells = ([(5000, 2500.0, 4.0, s) for s in (1, 2, 4, 8)]
+                       + [(5000, 5000.0, 4.0, s) for s in (1, 2, 4)])
+    result["cp_shard_sweep"] = []
+    for n_workers, rate, duration, s in shard_cells:
+        cell = churn_point(n_workers, rate, duration, cp_shards=s)
+        result["cp_shard_sweep"].append(cell)
+        print(f"workers={n_workers} rate={rate:.0f} cp_shards={s}: "
+              f"{cell['creations_per_sim_s']} creations/sim_s, "
+              f"lock_wait={cell['lock_wait_sim_s']}s, "
+              f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -162,6 +203,14 @@ def run(reporter, quick: bool = True) -> dict:
             + ("" if cell["policy"] == "balanced" else f"/{cell['policy']}"),
             cell["p50_ms"] * 1e3,
             f"p99_ms={cell['p99_ms']};ev_per_wall_s={cell['events_per_wall_s']}")
+    for cell in result.get("cp_shard_sweep", []):
+        reporter.add(
+            f"churn/shards={cell['cp_shards']}/workers={cell['workers']}"
+            f"/rate={cell['rate']}",
+            cell["p50_ms"] * 1e3,
+            f"p99_ms={cell['p99_ms']};"
+            f"creations_per_sim_s={cell['creations_per_sim_s']};"
+            f"lock_wait_sim_s={cell['lock_wait_sim_s']}")
     return result
 
 

@@ -44,8 +44,8 @@ def preload_functions(system, names: List[str],
         for name in names:
             fn = Fn(name=name, image_url="img://bench", port=80,
                     scaling=ScalingConfig(**scaling_kw))
-            leader.functions[name] = FunctionState(
-                function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
+            # install_function routes the record to its owning CP shard too
+            leader.install_function(fn)
             for dp in system.data_planes:
                 dp.sync_functions([name])
     else:

@@ -10,6 +10,12 @@ on the Knative baseline, with a 10-minute warm-up discarded, and reports:
 
 The larger 4K-function trace (paper §5.3 "Larger trace") runs on Dirigent
 only — Knative cannot sustain it, which is itself one of the paper's claims.
+
+Scale-out regime (ROADMAP): the large trace is additionally replayed on a
+5000-worker cluster (1000 in quick mode) with a control-plane shard sweep
+(``cp_shards`` ∈ {1, 4}) — the C9 regime where worker heartbeats contend the
+same shared structures as autoscaling and the sharded CP keeps scheduling
+latency flat.
 """
 from __future__ import annotations
 
@@ -24,12 +30,12 @@ WARMUP = 600.0
 
 
 def _run_trace(system_kind: str, trace, n_workers: int = 93, seed: int = 41,
-               extra: float = 120.0):
+               extra: float = 120.0, **sys_kw):
     env = Environment(seed=seed)
     if system_kind == "dirigent":
-        sys_ = make_dirigent(env, n_workers=n_workers)
+        sys_ = make_dirigent(env, n_workers=n_workers, **sys_kw)
     else:
-        sys_ = make_knative(env, n_workers=n_workers)
+        sys_ = make_knative(env, n_workers=n_workers, **sys_kw)
     preload_functions(sys_, [f.name for f in trace.functions])
     invs = []
 
@@ -117,6 +123,27 @@ def run(reporter, quick: bool = True) -> dict:
                  f"p99={a['perfn_slowdown_p99']:.1f};n={a['n']};"
                  f"failed={a['n_failed']}")
     out["large"] = a
+
+    # scale-out regime: same large trace, thousands of workers, CP shard
+    # sweep (heartbeat volume now contends whatever the autoscaler locks)
+    so_workers = 1000 if quick else 5000
+    out["scaleout"] = {}
+    for cp_shards in (1, 4):
+        sys_, invs = _run_trace("dirigent", big, n_workers=so_workers,
+                                seed=47, cp_shards=cp_shards)
+        a = analyze(invs, bwarm)
+        lock_wait = sum(
+            s.lock_wait_s
+            for s in sys_.control_plane_leader().shards)
+        reporter.add(
+            f"scaleout/dirigent/workers={so_workers}/cp_shards={cp_shards}",
+            a["sched_p50_ms"] * 1e3,
+            f"sched_p99_ms={a['sched_p99_ms']:.1f};n={a['n']};"
+            f"lock_wait_sim_s={lock_wait:.3f};"
+            f"sandboxes={sys_.collector.sandbox_creations}")
+        a["lock_wait_sim_s"] = lock_wait
+        a["sandboxes"] = sys_.collector.sandbox_creations
+        out["scaleout"][f"cp_shards={cp_shards}"] = a
     return out
 
 

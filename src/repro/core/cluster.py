@@ -12,6 +12,14 @@
 Failure injection: ``fail_control_plane_leader()``, ``fail_data_plane(i)``,
 ``fail_worker_daemon(wid)``, ``fail_worker_node(wid)`` — each with the
 corresponding recovery path from paper §3.4.
+
+Scaling knobs: ``cp_shards`` partitions the control plane itself into N
+internal shards (per-shard scale lock, autoscale loop, health monitor and
+endpoint-flush queue — see core/control_plane.py); the default of 1
+reproduces the paper's single-lock CP bit-identically. ``placement_policy``
+selects node scoring (core/policies.py); with ``cp_shards > 1`` the CP
+always composes a ``PartitionedPlacer`` whose partitions align with the CP
+shards so placements stay shard-local on the hot path.
 """
 from __future__ import annotations
 
@@ -41,6 +49,7 @@ class Cluster:
                  hedge_after: Optional[float] = None,
                  lb_policy: str = "least_loaded",
                  placement_policy: str = "balanced",
+                 cp_shards: int = 1,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
@@ -56,7 +65,8 @@ class Cluster:
         self.control_planes: List[ControlPlane] = [
             ControlPlane(env, i, self.costs, self, self.store, self.collector,
                          persist_sandbox_state=persist_sandbox_state,
-                         placement_policy=placement_policy)
+                         placement_policy=placement_policy,
+                         cp_shards=cp_shards)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [
@@ -118,13 +128,18 @@ class Cluster:
                 yield from leader.register_data_plane(info)
             for wid, w in self.workers.items():
                 yield from leader.register_worker(w.info)
+                # the daemon starts heartbeating the moment it registers.
+                # Starting these only after the WHOLE boot loop used to let
+                # early-registered workers exceed the heartbeat timeout while
+                # later registrations' persistence writes were still draining
+                # (boot is O(n_workers) fsyncs of sim time), silently evicting
+                # ~a quarter of a 1000-worker fleet before first beat.
+                self._worker_hb_procs[wid] = self.env.process(
+                    self._worker_heartbeat(wid), name=f"hb-{wid}")
             done.succeed(None)
 
         self.env.process(boot(self.env), name="cluster-boot")
         self.env.run_until_event(done)
-        for wid in self.workers:
-            self._worker_hb_procs[wid] = self.env.process(
-                self._worker_heartbeat(wid), name=f"hb-{wid}")
 
     def _worker_heartbeat(self, wid: int) -> Generator:
         c = self.costs

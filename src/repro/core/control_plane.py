@@ -1,4 +1,4 @@
-"""Monolithic control plane (paper §3).
+"""Sharded monolithic control plane (paper §3, §5.2.2).
 
 One process-level component containing the state manager, autoscaler, placer
 and health monitor as modules that exchange information via in-memory
@@ -11,17 +11,45 @@ reconstructed after failover (from worker nodes / DP traffic). The ablation
 flag ``persist_sandbox_state`` puts a durable write back on the cold-start
 critical path — reproducing the paper's "Dirigent optimization breakdown".
 
-The shared ``_scale_lock`` models the "shared data structures used for
-autoscaling" that the paper identifies as Dirigent's own bottleneck at
-~2500 sandbox creations/s (C1); heartbeat processing touches the same
-structures, which is what degrades throughput at 5000 workers (C9).
+Sharding (``cp_shards``). The paper identifies Dirigent's own ceiling at
+~2500 sandbox creations/s as "access congestion on shared data structures
+used for autoscaling" (C1), with heartbeat processing degrading creation
+throughput further at 5000 workers (C9). PR 1 sharded the *placer*; this
+module shards the control plane itself. The CP is partitioned into
+``cp_shards`` internal shards (``ControlPlaneShard``), and each shard owns:
+
+  * its own scale lock (the per-shard slice of the autoscaling structures),
+  * its own autoscale loop over the functions it owns,
+  * its own health monitor over the workers it owns, and
+  * its own CP→DP endpoint-update flush queue.
+
+Functions hash to a shard with ``simcore.stable_hash(name) % cp_shards``;
+workers map to the shard ``worker_id % cp_shards`` — the same partition the
+``PartitionedPlacer`` uses, so a shard's sandbox creation scores only its own
+workers and a placement never crosses shards on the hot path. Cross-shard
+concerns take explicit fan-out paths, each paying ``cp_cross_shard_op`` per
+foreign shard touched instead of one global critical section:
+
+  * capacity spill — a shard whose own workers are full probes the other
+    placer shards round-robin (off the common case, still correct);
+  * worker eviction — the owning shard detects the missed heartbeats, then
+    fans the affected functions' reconciles out to their owning shards;
+  * leader recovery — ``recover_as_leader`` rebuilds every shard's function
+    and worker maps from the persisted records in one pass.
+
+Metric ingestion from DPs needs no lock in this model (autoscaler windows
+are per-function); the urgent fast path reconciles under the function's
+owning shard only. ``cp_shards=1`` (the default) degenerates to exactly the
+pre-shard control plane — one lock, one autoscale loop, one health loop, one
+flush queue, same event sequence — which tests pin bit-identically against
+recorded fig7/fig8 goldens (tests/test_cp_sharding.py).
 """
 from __future__ import annotations
 
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
+from typing import Deque, Dict, Generator, List, Tuple, TYPE_CHECKING
 
 from repro.core.abstractions import (
     Function, Sandbox, SandboxState, WorkerNodeInfo,
@@ -29,8 +57,8 @@ from repro.core.abstractions import (
 from repro.core.autoscaler import FunctionAutoscalerState
 from repro.core.costmodel import DirigentCosts
 from repro.core.metrics import Collector
-from repro.core.placement import make_placer
-from repro.simcore import Environment, Interrupt
+from repro.core.placement import PartitionedPlacer, make_placer
+from repro.simcore import Environment, Interrupt, stable_hash
 
 if TYPE_CHECKING:
     from repro.core.cluster import Cluster
@@ -49,11 +77,39 @@ class FunctionState:
                    if s.state == SandboxState.READY)
 
 
+class ControlPlaneShard:
+    """One internal CP shard: the state a single shard owner serializes.
+
+    Everything the pre-shard CP guarded with the one global ``_scale_lock``
+    lives here, per shard: the scale lock itself, the functions this shard
+    autoscales, the last-heartbeat map for the workers it health-checks, and
+    the coalescing CP→DP endpoint-update buffer (updates queued in the same
+    event-loop turn ride one batched broadcast per shard).
+
+    ``lock_wait_s`` accumulates time processes spent queued on this shard's
+    scale lock — the direct measure of the C1 lock convoy that sharding
+    removes (exported via monitoring and the churn benchmark).
+    """
+
+    __slots__ = ("shard_id", "functions", "worker_last_hb", "scale_lock",
+                 "ep_updates", "ep_flush_scheduled", "lock_wait_s")
+
+    def __init__(self, env: Environment, shard_id: int):
+        self.shard_id = shard_id
+        self.functions: Dict[str, FunctionState] = {}
+        self.worker_last_hb: Dict[int, float] = {}
+        self.scale_lock = env.resource(capacity=1)
+        self.ep_updates: Deque[Tuple[str, str, object, bool]] = deque()
+        self.ep_flush_scheduled = False
+        self.lock_wait_s = 0.0
+
+
 class ControlPlane:
     def __init__(self, env: Environment, cp_id: int, costs: DirigentCosts,
                  cluster: "Cluster", store, collector: Collector,
                  persist_sandbox_state: bool = False,
-                 placement_policy: str = "balanced"):
+                 placement_policy: str = "balanced",
+                 cp_shards: int = 1):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -63,28 +119,61 @@ class ControlPlane:
         self.persist_sandbox_state = persist_sandbox_state
         self.is_leader = False
         self.alive = True
+        # global registry: every function the CP knows, across all shards.
+        # Shards additionally hold their owned slice (same FunctionState
+        # objects) for their autoscale loops.
         self.functions: Dict[str, FunctionState] = {}
         self.workers: Dict[int, WorkerNodeInfo] = {}
-        self.worker_last_hb: Dict[int, float] = {}
         self.placement_policy = placement_policy
-        self.placer = make_placer(placement_policy)
-        self._scale_lock = env.resource(capacity=1)
+        self.cp_shards = max(1, cp_shards)
+        self.shards: List[ControlPlaneShard] = [
+            ControlPlaneShard(env, k) for k in range(self.cp_shards)]
+        self.placer = self._make_placer()
         self._sandbox_ids = itertools.count(1)
         self._loops = []
         self.no_downscale_until = 0.0
-        # coalescing CP -> DP endpoint-update buffer: updates queued in the
-        # same event-loop turn ride one batched broadcast (vs one serial
-        # grpc_call per DP per update on the creation critical path)
-        self._ep_updates: Deque[Tuple[str, str, object, bool]] = deque()
-        self._ep_flush_scheduled = False
+
+    # -- shard routing ---------------------------------------------------------------
+    def _fn_shard(self, name: str) -> ControlPlaneShard:
+        if self.cp_shards == 1:
+            return self.shards[0]
+        return self.shards[stable_hash(name) % self.cp_shards]
+
+    def _worker_shard(self, worker_id: int) -> ControlPlaneShard:
+        # same partition as PartitionedPlacer._shard, so the workers a shard
+        # health-checks are the workers its placer slice scores
+        if self.cp_shards == 1:
+            return self.shards[0]
+        return self.shards[worker_id % self.cp_shards]
+
+    def _make_placer(self):
+        if self.cp_shards > 1:
+            # PartitionedPlacer normalizes policy="partitioned" itself
+            return PartitionedPlacer(policy=self.placement_policy,
+                                     n_shards=self.cp_shards)
+        return make_placer(self.placement_policy)
+
+    @property
+    def worker_last_hb(self) -> Dict[int, float]:
+        """Merged last-heartbeat view across shards (diagnostics/tests)."""
+        if self.cp_shards == 1:
+            return self.shards[0].worker_last_hb
+        merged: Dict[int, float] = {}
+        for shard in self.shards:
+            merged.update(shard.worker_last_hb)
+        return merged
 
     # -- lifecycle -----------------------------------------------------------------
     def start_leader(self) -> None:
         self.is_leader = True
-        self._loops = [
-            self.env.process(self._autoscale_loop(), name=f"cp{self.cp_id}-autoscale"),
-            self.env.process(self._health_loop(), name=f"cp{self.cp_id}-health"),
-        ]
+        self._loops = []
+        for shard in self.shards:
+            self._loops.append(self.env.process(
+                self._autoscale_loop(shard),
+                name=f"cp{self.cp_id}-autoscale-{shard.shard_id}"))
+            self._loops.append(self.env.process(
+                self._health_loop(shard),
+                name=f"cp{self.cp_id}-health-{shard.shard_id}"))
 
     def stop(self) -> None:
         self.alive = False
@@ -92,15 +181,24 @@ class ControlPlane:
         for p in self._loops:
             p.kill()
         self._loops = []
-        self._ep_updates.clear()
+        for shard in self.shards:
+            shard.ep_updates.clear()
 
     # -- user API --------------------------------------------------------------------
+    def install_function(self, fn: Function) -> FunctionState:
+        """Insert a function into the registry and its owning shard, with no
+        modeled cost (registration bypass for benchmarks / recovery)."""
+        st = FunctionState(function=fn,
+                           autoscaler=FunctionAutoscalerState(fn.scaling))
+        self.functions[fn.name] = st
+        self._fn_shard(fn.name).functions[fn.name] = st
+        return st
+
     def register_function(self, fn: Function) -> Generator:
         """Register: persist the spec, propagate metadata to DPs (paper: ~2 ms)."""
         yield self.env.timeout(self.costs.grpc_call)          # client -> CP
         yield from self.store.write(f"function/{fn.name}", fn.persisted_record())
-        self.functions[fn.name] = FunctionState(
-            function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
+        self.install_function(fn)
         # propagate to data planes: one batched broadcast covers every DP
         dps = self.cluster.data_planes_alive()
         if dps:
@@ -112,6 +210,7 @@ class ControlPlane:
     def deregister_function(self, name: str) -> Generator:
         yield from self.store.write(f"function/{name}", None)
         st = self.functions.pop(name, None)
+        self._fn_shard(name).functions.pop(name, None)
         if st:
             for sb in list(st.sandboxes.values()):
                 yield from self._teardown_sandbox(st, sb)
@@ -121,7 +220,8 @@ class ControlPlane:
         yield from self.store.write(f"worker/{info.worker_id}",
                                     info.persisted_record())
         self.workers[info.worker_id] = info
-        self.worker_last_hb[info.worker_id] = self.env.now
+        self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] = \
+            self.env.now
         self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
                              info.mem_capacity_mb)
 
@@ -174,29 +274,33 @@ class ControlPlane:
         yield from self._reconcile_function(fn, st)
 
     def heartbeat(self, worker_id: int) -> None:
-        """Worker heartbeat. Touches the shared health/state structures."""
+        """Worker heartbeat. Touches the owning shard's health/state slice."""
         if not self.alive:
             return
-        self.worker_last_hb[worker_id] = self.env.now
-        # contention: heartbeat processing holds the shared state lock
+        shard = self._worker_shard(worker_id)
+        shard.worker_last_hb[worker_id] = self.env.now
+        # contention: heartbeat processing holds the shard's state lock (C9)
         def hb(env):
-            yield self._scale_lock.acquire()
+            t0 = env.now
+            yield shard.scale_lock.acquire()
+            shard.lock_wait_s += env.now - t0
             try:
                 yield env.timeout(self.costs.cp_heartbeat_lock_hold)
             finally:
-                self._scale_lock.release()
+                shard.scale_lock.release()
         self.env.process(hb(self.env), name="hb-touch")
 
     # -- autoscaling ------------------------------------------------------------------------
-    def _autoscale_loop(self) -> Generator:
+    def _autoscale_loop(self, shard: ControlPlaneShard) -> Generator:
         while True:
             yield self.env.timeout(self.costs.autoscale_period)
-            for fn, st in list(self.functions.items()):
+            for fn, st in list(shard.functions.items()):
                 yield from self._reconcile_function(fn, st)
 
     def _reconcile_function(self, fn: str, st: FunctionState) -> Generator:
         """Compute desired scale and act on the difference."""
         yield self.env.timeout(self.costs.cp_sched_cpu)
+        self.collector.reconciles += 1
         current = st.ready_count + st.creating
         desired = st.autoscaler.desired(self.env.now, current)
         if self.env.now < self.no_downscale_until:
@@ -218,17 +322,42 @@ class ControlPlane:
         return ready[:n]
 
     # -- sandbox creation (the latency-critical path) --------------------------------------------
+    def _place(self, shard: ControlPlaneShard, cpu: int, mem: int) -> Generator:
+        """Pick a worker for ``shard``'s new sandbox.
+
+        Single-shard CPs score the whole cluster (pre-shard behavior).
+        Sharded CPs score their own placer partition — the workers this same
+        shard health-checks — so the hot path never leaves the shard; only
+        when the shard's workers are full does the placement spill to foreign
+        partitions, paying ``cp_cross_shard_op`` per shard probed."""
+        if self.cp_shards == 1:
+            return self.placer.place(cpu, mem)
+        k = shard.shard_id
+        wid = self.placer.shards[k].place(cpu, mem)
+        if wid is not None:
+            return wid
+        for off in range(1, self.cp_shards):       # cross-shard capacity spill
+            yield self.env.timeout(self.costs.cp_cross_shard_op)
+            wid = self.placer.shards[(k + off) % self.cp_shards].place(cpu, mem)
+            if wid is not None:
+                return wid
+        return None
+
     def _create_sandbox(self, st: FunctionState) -> Generator:
         fn = st.function
+        shard = self._fn_shard(fn.name)
         try:
-            # shared autoscaling/cluster-state structures (C1 bottleneck)
-            yield self._scale_lock.acquire()
+            # the shard's slice of the autoscaling/cluster-state structures
+            # (C1 bottleneck; global when cp_shards == 1)
+            t0 = self.env.now
+            yield shard.scale_lock.acquire()
+            shard.lock_wait_s += self.env.now - t0
             try:
                 yield self.env.timeout(self.costs.cp_scale_lock_hold)
-                wid = self.placer.place(fn.scaling.cpu_req_millis,
-                                        fn.scaling.mem_req_mb)
+                wid = yield from self._place(shard, fn.scaling.cpu_req_millis,
+                                             fn.scaling.mem_req_mb)
             finally:
-                self._scale_lock.release()
+                shard.scale_lock.release()
             if wid is None:
                 return  # no capacity in the cluster
 
@@ -268,7 +397,7 @@ class ControlPlane:
             self.collector.event(self.env.now, "sandbox-created", fn.name)
             # in-memory state update; the endpoint rides the next coalesced
             # broadcast (one batched grpc_call for all DPs and all updates
-            # queued this turn)
+            # queued this turn on this shard)
             yield self.env.timeout(self.costs.channel_op)
             self._queue_endpoint_update("add", fn.name, sb)
         finally:
@@ -302,21 +431,24 @@ class ControlPlane:
                             st.function.scaling.mem_req_mb)
         self.collector.sandbox_teardowns += 1
 
-    # -- CP -> DP endpoint propagation (coalesced) ------------------------------------------------
+    # -- CP -> DP endpoint propagation (coalesced, per shard) -------------------------------------
     def _queue_endpoint_update(self, op: str, fn: str, payload,
                                drain: bool = True) -> None:
-        """Buffer an endpoint add/remove; every update queued in the same
-        event-loop turn shares one batched broadcast to all DPs."""
-        self._ep_updates.append((op, fn, payload, drain))
-        if not self._ep_flush_scheduled:
-            self._ep_flush_scheduled = True
-            self.env.process(self._flush_endpoint_updates(),
-                             name=f"cp{self.cp_id}-ep-flush")
+        """Buffer an endpoint add/remove on the function's owning shard;
+        every update queued on that shard in the same event-loop turn shares
+        one batched broadcast to all DPs."""
+        shard = self._fn_shard(fn)
+        shard.ep_updates.append((op, fn, payload, drain))
+        if not shard.ep_flush_scheduled:
+            shard.ep_flush_scheduled = True
+            self.env.process(
+                self._flush_endpoint_updates(shard),
+                name=f"cp{self.cp_id}-ep-flush-{shard.shard_id}")
 
-    def _flush_endpoint_updates(self) -> Generator:
+    def _flush_endpoint_updates(self, shard: ControlPlaneShard) -> Generator:
         yield self.env.timeout(self.costs.grpc_call)   # one batched broadcast
-        updates, self._ep_updates = self._ep_updates, deque()
-        self._ep_flush_scheduled = False
+        updates, shard.ep_updates = shard.ep_updates, deque()
+        shard.ep_flush_scheduled = False
         if not self.alive:
             return
         dps = self.cluster.data_planes_alive()
@@ -333,55 +465,90 @@ class ControlPlane:
                 for dp in dps:
                     dp.remove_endpoint(fn, payload, drain=drain)
 
-    # -- health monitoring -----------------------------------------------------------------------
-    def _health_loop(self) -> Generator:
+    # -- health monitoring (per shard) -------------------------------------------------------------
+    def _health_loop(self, shard: ControlPlaneShard) -> Generator:
         c = self.costs
         while True:
             yield self.env.timeout(c.worker_heartbeat_period)
             now = self.env.now
-            for wid, last in list(self.worker_last_hb.items()):
+            for wid, last in list(shard.worker_last_hb.items()):
                 if now - last > c.worker_heartbeat_timeout:
-                    yield from self._evict_worker(wid)
+                    yield from self._evict_worker(shard, wid)
 
-    def _evict_worker(self, wid: int) -> Generator:
-        """Worker declared dead: stop routing, reschedule its sandboxes."""
-        self.worker_last_hb.pop(wid, None)
+    def _evict_worker(self, shard: ControlPlaneShard, wid: int) -> Generator:
+        """Worker declared dead by its owning shard: stop routing, reschedule
+        its sandboxes. The dead worker may host sandboxes of functions owned
+        by *other* shards (cross-shard capacity spill), so replacing lost
+        capacity is an explicit cross-shard fan-out: this shard reconciles
+        its own functions inline, and hands each foreign shard that owned an
+        affected function a targeted reconcile message (``cp_cross_shard_op``
+        each)."""
+        shard.worker_last_hb.pop(wid, None)
         self.placer.set_schedulable(wid, False)
         affected: List[tuple] = []
         for fn, st in self.functions.items():
             for sb in [s for s in st.sandboxes.values() if s.worker_id == wid]:
                 st.sandboxes.pop(sb.sandbox_id, None)
                 affected.append((fn, sb.sandbox_id))
+        foreign: Dict[int, List[str]] = {}
         for fn, sid in affected:
             self._queue_endpoint_update("remove", fn, sid, drain=False)
+            owner = self._fn_shard(fn)
+            if owner is not shard and fn not in foreign.get(owner.shard_id, ()):
+                foreign.setdefault(owner.shard_id, []).append(fn)
         self.collector.event(self.env.now, "worker-evicted", wid)
-        # re-run autoscaling promptly to replace lost capacity
-        for fn, st in list(self.functions.items()):
+        # re-run autoscaling promptly to replace lost capacity: own functions
+        # inline in the health loop (pre-shard behavior when cp_shards == 1)...
+        for fn, st in list(shard.functions.items()):
+            yield from self._reconcile_function(fn, st)
+        # ...affected foreign-owned functions (cross-shard capacity spills)
+        # via explicit targeted fan-out; everything else is covered by each
+        # shard's own autoscale loop
+        for shard_id, fns in foreign.items():
+            self.env.process(
+                self._cross_shard_reconcile(self.shards[shard_id], fns),
+                name=f"cp{self.cp_id}-xshard-{shard_id}")
+
+    def _cross_shard_reconcile(self, shard: ControlPlaneShard,
+                               fns: List[str]) -> Generator:
+        yield self.env.timeout(self.costs.cp_cross_shard_op)
+        for fn in fns:
+            st = shard.functions.get(fn)
+            if st is None:
+                continue
+            # unlike the health/autoscale loops, fan-out processes are not in
+            # self._loops, so stop() does not kill them — a deposed leader
+            # must not keep scaling sandboxes on the shared workers
+            if not (self.alive and self.is_leader):
+                return
             yield from self._reconcile_function(fn, st)
 
     def restore_worker(self, wid: int) -> None:
-        self.worker_last_hb[wid] = self.env.now
+        self._worker_shard(wid).worker_last_hb[wid] = self.env.now
         self.placer.set_schedulable(wid, True)
 
     # -- failover recovery (new leader) ----------------------------------------------------------
     def recover_as_leader(self) -> Generator:
         """Paper §3.4.1: fetch persisted records, reconnect, reconstruct
-        sandbox state from worker nodes asynchronously."""
+        sandbox state from worker nodes asynchronously. Rebuilds every
+        shard's function/worker maps from the persisted records."""
         c = self.costs
         yield self.env.timeout(c.cp_recovery_db_fetch)
         func_records = yield from self.store.read_prefix("function/")
         worker_records = yield from self.store.read_prefix("worker/")
         self.functions = {}
+        for shard in self.shards:
+            shard.functions = {}
+            shard.worker_last_hb = {}
         for key, rec in func_records.items():
-            fn = Function.from_record(rec)
-            self.functions[fn.name] = FunctionState(
-                function=fn, autoscaler=FunctionAutoscalerState(fn.scaling))
+            self.install_function(Function.from_record(rec))
         self.workers = {}
-        self.placer = make_placer(self.placement_policy)
+        self.placer = self._make_placer()
         for key, rec in worker_records.items():
             info = WorkerNodeInfo.from_record(rec)
             self.workers[info.worker_id] = info
-            self.worker_last_hb[info.worker_id] = self.env.now
+            self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] \
+                = self.env.now
             self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
                                  info.mem_capacity_mb)
         # sync DP caches with the function list

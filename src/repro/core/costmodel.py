@@ -1,9 +1,10 @@
 """Calibrated service-time constants for the cluster-manager simulations.
 
 Every constant is traceable either to a number stated in the paper or to a
-calibration target (a paper claim C1..C12, see DESIGN.md §1). The *loaded*
-behaviour — saturation throughput, tail blow-ups — is NOT encoded here; it
-emerges from queueing at the modeled resources.
+calibration target (a paper claim C1..C12, see DESIGN.md §1 and
+docs/benchmarks.md). The *loaded* behaviour — saturation throughput, tail
+blow-ups — is NOT encoded here; it emerges from queueing at the modeled
+resources.
 """
 from __future__ import annotations
 
@@ -12,6 +13,42 @@ from dataclasses import dataclass, field
 
 @dataclass
 class DirigentCosts:
+    """Dirigent mechanism constants and the paper measurements they model.
+
+    Key calibration anchors (claim ids C1..C12 are cross-referenced from the
+    benchmarks; see docs/benchmarks.md for the figure mapping):
+
+    * ``cp_scale_lock_hold`` — the C1 bottleneck. The paper attributes
+      Dirigent's ~2500 sandbox creations/s ceiling (93 nodes, Fig 7) to
+      "access congestion on shared data structures used for autoscaling":
+      0.36 ms of serialized state-update work per creation ≈ 2778/s through
+      one lock. With ``cp_shards > 1`` each control-plane shard holds its own
+      lock over its slice, so the modeled ceiling scales with the shard count
+      (benchmarks/churn_scale.py ``cp_shard_sweep``).
+    * ``cp_heartbeat_lock_hold`` — C9: heartbeat processing touches the same
+      shared structures, which is what degrades creation throughput at 5000
+      workers (5000 workers × 2 hb/s × 12 µs ≈ 12% of one lock).
+    * ``cp_cross_shard_op`` — sharded-CP fan-out hop: the in-memory handoff
+      one shard pays per foreign shard it touches (placement capacity spill,
+      post-eviction reconcile fan-out). Modeled like ``channel_op`` (a Go
+      channel/atomic handoff, no network), slightly dearer for the extra
+      synchronization; it only exists when ``cp_shards > 1``.
+    * ``grpc_call`` / ``channel_op`` — paper §3: Dirigent components talk
+      gRPC across processes but exchange information through in-memory
+      channels inside the monolithic CP (vs RPC+etcd round-trips in K8s).
+    * ``persist_write`` (+ sigma/stall) — C3: fsync'd Redis AOF append; with
+      sandbox state persisted on the critical path (the ablation) creation
+      throughput caps at ~1000/s and p99 surges from AOF-rewrite stalls.
+    * ``containerd_create_median`` / ``firecracker_create_median`` — Fig 7
+      regimes: containerd cold boots in the 100 ms band and is kernel-lock
+      bound at ~1750/s on 93 nodes (C2); Firecracker snapshot restores at
+      ~40 ms p50 (paper §5.2.3).
+    * ``raft_*`` / ``cp_recovery_*`` — C10: detect + elect + fetch + DP sync
+      ≈ 10 ms control-plane failover.
+    * ``lb_reconfigure`` / ``lb_health_check`` — C11: keepalived/HAProxy
+      failover ≈ 2 s end to end.
+    """
+
     # -- networking --------------------------------------------------------
     grpc_call: float = 0.3e-3          # one gRPC hop (paper §4: components talk gRPC)
     lb_hop: float = 0.2e-3             # HAProxy front-end hop
@@ -36,6 +73,11 @@ class DirigentCosts:
     #                                    at ~2500 creations/s (paper: "access
     #                                    congestion on shared data structures
     #                                    used for autoscaling").
+    cp_cross_shard_op: float = 4e-6    # sharded-CP fan-out hop per foreign
+    #                                    shard touched (capacity spill,
+    #                                    post-eviction reconcile); in-memory,
+    #                                    ~2x channel_op for the extra sync.
+    #                                    Unused when cp_shards == 1.
     autoscale_period: float = 2.0      # autoscaler evaluation tick (KPA default)
     recovery_no_downscale: float = 60.0  # paper §3.4.1
 

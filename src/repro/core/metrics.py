@@ -31,6 +31,7 @@ class Collector:
     events: List[tuple] = field(default_factory=list)   # (t, kind, detail)
     sandbox_creations: int = 0
     sandbox_teardowns: int = 0
+    reconciles: int = 0        # autoscale/reconcile decisions taken by the CP
 
     def done(self, inv: Invocation) -> None:
         self.invocations.append(inv)

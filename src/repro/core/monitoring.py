@@ -26,6 +26,8 @@ def render_metrics(cluster: "Cluster") -> str:
     lines.append("# TYPE dirigent_sandbox_creations_total counter")
     lines.append(f"dirigent_sandbox_creations_total {c.sandbox_creations}")
     lines.append(f"dirigent_sandbox_teardowns_total {c.sandbox_teardowns}")
+    lines.append("# TYPE dirigent_cp_reconciles_total counter")
+    lines.append(f"dirigent_cp_reconciles_total {c.reconciles}")
     lines.append("# TYPE dirigent_persistent_writes_total counter")
     lines.append(f"dirigent_persistent_writes_total {cluster.store.write_count}")
 
@@ -34,6 +36,23 @@ def render_metrics(cluster: "Cluster") -> str:
     lines.append(f"dirigent_control_plane_leader "
                  f"{leader.cp_id if leader else -1}")
     if leader is not None:
+        # per-shard CP health: ownership counts, lock queue depth, and the
+        # accumulated scale-lock convoy time sharding exists to remove (C1)
+        shard_families = [
+            ("dirigent_cp_shard_functions", "gauge",
+             lambda s: len(s.functions)),
+            ("dirigent_cp_shard_workers", "gauge",
+             lambda s: len(s.worker_last_hb)),
+            ("dirigent_cp_shard_lock_queue", "gauge",
+             lambda s: s.scale_lock.queue_len),
+            ("dirigent_cp_shard_lock_wait_seconds_total", "counter",
+             lambda s: f"{s.lock_wait_s:.6f}"),
+        ]
+        for family, kind, value in shard_families:
+            lines.append(f"# TYPE {family} {kind}")
+            for shard in leader.shards:
+                lines.append(f"{family}{{shard=\"{shard.shard_id}\"}} "
+                             f"{value(shard)}")
         lines.append("# TYPE dirigent_function_ready_sandboxes gauge")
         for name, st in sorted(leader.functions.items()):
             lines.append(f"dirigent_function_ready_sandboxes"

@@ -14,9 +14,18 @@ creations/s):
     The index reproduces the brute-force scan bit-for-bit, including the
     lowest-worker-id tie-break (property-tested in tests/test_property.py).
   * ``PartitionedPlacer`` — Archipelago-style sharded placement: nodes are
-    statically partitioned, each shard has its own index, and a deterministic
-    round-robin cursor picks the shard to try first. Keeps per-placement work
-    bounded by the shard size in the 5000-worker regime.
+    statically partitioned (``wid % n_shards``), each shard has its own
+    index, and a deterministic round-robin cursor picks the shard to try
+    first. Keeps per-placement work bounded by the shard size in the
+    5000-worker regime.
+
+The sharded control plane (core/control_plane.py, ``cp_shards > 1``)
+composes with ``PartitionedPlacer`` by construction: the CP builds one with
+``n_shards = cp_shards`` and CP shard *k* scores ``placer.shards[k]``
+directly — the exact worker partition shard *k* health-checks — so a
+placement never crosses shards on the hot path. The parent ``place()``
+round-robin entry point remains for single-domain callers
+(``placement_policy="partitioned"`` with an unsharded CP).
 """
 from __future__ import annotations
 

@@ -15,9 +15,20 @@ relevant Go interfaces" — this module is that interface surface, in Python:
     the 5000-worker regime — a placer structure, not a scoring function; see
     core/placement.py).
 
+Two sharding knobs exist and they are different layers:
+
+  * ``placement_policy="partitioned"`` shards only the placer's *score
+    index* (a data-structure optimization inside one scheduling domain);
+  * ``Cluster(cp_shards=N)`` shards the *control plane itself* — per-shard
+    scale locks, autoscale loops, health monitors and endpoint-flush queues
+    (core/control_plane.py). With ``cp_shards > 1`` the CP composes a
+    ``PartitionedPlacer`` whose partitions align with the CP shards, so any
+    scoring policy here runs shard-locally on the hot path.
+
 Benchmarks keep the Knative-default policies for paper fidelity; the
 policies here are selectable via ``Cluster(lb_policy=...)`` /
-``Placer(policy=...)`` and covered by tests/test_policies.py.
+``Placer(policy=...)`` / ``Cluster(cp_shards=...)`` and covered by
+tests/test_policies.py and tests/test_cp_sharding.py.
 """
 from __future__ import annotations
 

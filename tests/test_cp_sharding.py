@@ -1,0 +1,370 @@
+"""Sharded control plane (core/control_plane.py, ``cp_shards``).
+
+Two claims are pinned here:
+
+1. ``cp_shards=1`` (the default) is *bit-identical* to the pre-shard control
+   plane. The ``GOLD7``/``GOLD8`` constants below were recorded by running
+   the exact workloads in this file against a reference tree built from the
+   pre-shard control plane (commit 16aeff4's core modules) plus this PR's
+   orthogonal worker-heartbeat boot fix in cluster.py: same latency
+   percentiles to the last float bit, same creation/teardown counts, and —
+   the strongest pin — the same total number of simulator events, i.e. the
+   identical event sequence. (Relative to pure 16aeff4, only the event
+   totals differ, by the few boot-window heartbeat events the fix adds;
+   every latency statistic is bit-identical to pure 16aeff4 too.)
+
+2. ``cp_shards>1`` partitions functions and workers across shards with
+   per-shard scale locks and health monitors, keeps placement shard-local
+   until capacity forces a spill, survives concurrent multi-worker failure
+   in different shards, and rebuilds every shard on leader failover.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Cluster, Function, ScalingConfig
+from repro.simcore import Environment, stable_hash
+
+COLD_SCALING = dict(stable_window=1.0, panic_window=1.0,
+                    scale_to_zero_grace=0.2, cpu_req_millis=100,
+                    mem_req_mb=128)
+
+# Recorded from the pre-shard ControlPlane (see module docstring) with this
+# PR's worker-heartbeat boot fix applied to cluster.py — the fix starts each
+# worker's heartbeat at registration, which adds a few boot-window events but
+# leaves every latency statistic bit-identical at this scale. Any change to
+# these workloads invalidates the constants — re-record, don't tweak.
+GOLD7 = {"done": 240, "total": 240, "creations": 240, "teardowns": 240,
+         "p50": 0.14846846481036485, "p99": 0.17291408266620184,
+         "lat_sum": 35.9401392552082, "events": 158654}
+GOLD8 = {"done": 400, "total": 400, "creations": 8,
+         "p50": 0.0015260204436948754, "p99": 0.002034961221146396,
+         "lat_sum": 0.6199089000305911, "events": 99302}
+
+
+def _preload(cl, names, scaling_kw):
+    leader = cl.control_plane_leader()
+    for name in names:
+        fn = Function(name=name, image_url="img://bench", port=80,
+                      scaling=ScalingConfig(**scaling_kw))
+        leader.install_function(fn)
+        for dp in cl.data_planes:
+            dp.sync_functions([name])
+
+
+def fig7_cold_stats(**cluster_kw):
+    """Fig 7 workload shape: every invocation is a cold start."""
+    env = Environment(seed=11)
+    cl = Cluster(env, n_workers=93, runtime="firecracker", **cluster_kw)
+    cl.start()
+    n, rate = 240, 300.0
+    _preload(cl, [f"f{i}" for i in range(n)], COLD_SCALING)
+    invs = []
+
+    def driver(env):
+        for i in range(n):
+            invs.append(cl.invoke(f"f{i}", exec_time=0.1))
+            yield env.timeout(1.0 / rate)
+
+    env.process(driver(env), name="driver")
+    env.run(until=n / rate + 30.0)
+    lats = np.array([i.e2e_latency for i in invs
+                     if i.t_done > 0 and not i.failed])
+    return {
+        "done": int(lats.size), "total": len(invs),
+        "creations": cl.collector.sandbox_creations,
+        "teardowns": cl.collector.sandbox_teardowns,
+        "p50": float(np.percentile(lats, 50)),
+        "p99": float(np.percentile(lats, 99)),
+        "lat_sum": float(lats.sum()),
+        "events": env.events_processed,
+    }
+
+
+def fig8_warm_stats(**cluster_kw):
+    """Fig 8 workload shape: scale up once, then a warm-only open loop."""
+    env = Environment(seed=21)
+    cl = Cluster(env, n_workers=93, runtime="firecracker", **cluster_kw)
+    cl.start()
+    cl.register_sync(Function(
+        name="w", image_url="img://bench", port=80,
+        scaling=ScalingConfig(target_concurrency=1, stable_window=300,
+                              scale_to_zero_grace=300)))
+    warmup = [cl.invoke("w", exec_time=2.0) for _ in range(8)]
+    env.run(until=10.0)
+    invs = []
+
+    def driver(env):
+        for _ in range(400):
+            invs.append(cl.invoke("w", exec_time=0.3e-3))
+            yield env.timeout(1.0 / 200.0)
+
+    env.process(driver(env), name="driver")
+    env.run(until=20.0)
+    assert all(not i.failed for i in warmup)
+    lats = np.array([i.e2e_latency for i in invs
+                     if i.t_done > 0 and not i.failed])
+    return {
+        "done": int(lats.size), "total": len(invs),
+        "creations": cl.collector.sandbox_creations,
+        "p50": float(np.percentile(lats, 50)),
+        "p99": float(np.percentile(lats, 99)),
+        "lat_sum": float(lats.sum()),
+        "events": env.events_processed,
+    }
+
+
+# -- equivalence: cp_shards=1 == pre-shard CP ---------------------------------
+
+@pytest.mark.parametrize("kw", [{}, {"cp_shards": 1}],
+                         ids=["default", "explicit-1"])
+def test_fig7_cold_bit_identical_to_preshard_cp(kw):
+    assert fig7_cold_stats(**kw) == GOLD7
+
+
+@pytest.mark.parametrize("kw", [{}, {"cp_shards": 1}],
+                         ids=["default", "explicit-1"])
+def test_fig8_warm_bit_identical_to_preshard_cp(kw):
+    assert fig8_warm_stats(**kw) == GOLD8
+
+
+def test_sharded_cp_same_workload_same_outcomes():
+    """cp_shards=4 is a different event interleaving, not different results:
+    everything completes, the creation/teardown economy is unchanged, and
+    latency stats stay in the same band on an uncontended cluster."""
+    g7 = fig7_cold_stats(cp_shards=4)
+    assert (g7["done"], g7["total"]) == (GOLD7["done"], GOLD7["total"])
+    assert g7["creations"] == GOLD7["creations"]
+    assert g7["teardowns"] == GOLD7["teardowns"]
+    assert abs(g7["p50"] - GOLD7["p50"]) / GOLD7["p50"] < 0.05
+    g8 = fig8_warm_stats(cp_shards=4)
+    assert (g8["done"], g8["creations"]) == (GOLD8["done"], GOLD8["creations"])
+    assert abs(g8["p50"] - GOLD8["p50"]) / GOLD8["p50"] < 0.05
+
+
+# -- shard mechanics ----------------------------------------------------------
+
+def make_cluster(seed=3, **kw):
+    env = Environment(seed=seed)
+    kw.setdefault("n_workers", 16)
+    kw.setdefault("enable_ha_sim", True)
+    cl = Cluster(env, **kw)
+    cl.start()
+    return env, cl
+
+
+def test_functions_and_workers_partition_across_shards():
+    env, cl = make_cluster(cp_shards=4)
+    names = [f"f{i}" for i in range(12)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80))
+    leader = cl.control_plane_leader()
+    assert len(leader.shards) == 4
+    # every function lives in exactly one shard, the stable_hash one
+    owned = {}
+    for shard in leader.shards:
+        for n in shard.functions:
+            assert n not in owned
+            owned[n] = shard.shard_id
+    assert owned == {n: stable_hash(n) % 4 for n in names}
+    assert set(owned) == set(leader.functions)
+    # workers partition by wid % cp_shards, matching the placer partition
+    for shard in leader.shards:
+        assert all(wid % 4 == shard.shard_id
+                   for wid in shard.worker_last_hb)
+    assert sum(len(s.worker_last_hb) for s in leader.shards) == 16
+
+
+def test_placement_stays_shard_local_until_spill():
+    env, cl = make_cluster(cp_shards=4, n_workers=16)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(stable_window=300,
+                                                    scale_to_zero_grace=300)))
+    leader = cl.control_plane_leader()
+    k = stable_hash("f") % 4
+    invs = [cl.invoke("f", exec_time=5.0) for _ in range(3)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    st = leader.functions["f"]
+    # hot path: every sandbox landed on the owning shard's own workers
+    assert all(sb.worker_id % 4 == k for sb in st.sandboxes.values())
+
+
+def test_placement_spills_cross_shard_when_own_shard_full():
+    # 4 workers / 4 shards -> exactly one worker per shard; a function whose
+    # demand exceeds its own worker's capacity must spill to foreign shards
+    env, cl = make_cluster(cp_shards=4, n_workers=4)
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=300, scale_to_zero_grace=300,
+                              cpu_req_millis=4000, mem_req_mb=1024)))
+    k = stable_hash("f") % 4
+    invs = [cl.invoke("f", exec_time=5.0) for _ in range(4)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    wids = {sb.worker_id for sb in leader.functions["f"].sandboxes.values()}
+    assert any(w % 4 == k for w in wids)        # own shard used first
+    assert any(w % 4 != k for w in wids), "no cross-shard spill happened"
+
+
+def test_per_shard_health_eviction_concurrent_multi_worker_failure():
+    """Workers in *different* shards fail at the same instant: each owning
+    shard's health monitor evicts its own dead worker, affected functions are
+    reconciled across shards, and replacements land off the dead workers."""
+    env, cl = make_cluster(cp_shards=4, n_workers=16)
+    names = [f"f{i}" for i in range(8)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80,
+                                  scaling=ScalingConfig(
+                                      stable_window=120,
+                                      scale_to_zero_grace=120)))
+    invs = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    used = sorted({sb.worker_id for n in names
+                   for sb in leader.functions[n].sandboxes.values()})
+    # kill one used worker in each of (at least) two different shards
+    victims, shards_hit = [], set()
+    for wid in used:
+        if wid % 4 not in shards_hit:
+            victims.append(wid)
+            shards_hit.add(wid % 4)
+        if len(victims) == 3:
+            break
+    assert len(victims) >= 2, f"workload only touched shards {shards_hit}"
+    for wid in victims:
+        cl.fail_worker_daemon(wid)
+
+    def traffic(env):
+        while env.now < 20.0:
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(0.5)
+
+    env.process(traffic(env), name="traffic")
+    env.run(until=25.0)
+    evicted = [d for t, k, d in cl.collector.events if k == "worker-evicted"]
+    for wid in victims:
+        assert wid in evicted, f"worker {wid} never evicted"
+        assert wid not in leader.shards[wid % 4].worker_last_hb
+    for n in names:
+        st = leader.functions[n]
+        assert st.ready_count >= 1, f"{n} lost all capacity"
+        assert all(sb.worker_id not in victims
+                   for sb in st.sandboxes.values())
+    late = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=35.0)
+    assert all(not i.failed for i in late)
+
+
+def test_failover_rebuilds_all_shards():
+    env, cl = make_cluster(cp_shards=4)
+    names = [f"f{i}" for i in range(6)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80))
+    invs = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=5.0)
+    cl.fail_control_plane_leader()
+    env.run(until=7.0)
+    leader = cl.control_plane_leader()
+    assert leader is not None and leader.cp_id != 0
+    # function records land back in their owning shards, same partition
+    for n in names:
+        k = stable_hash(n) % 4
+        assert n in leader.shards[k].functions
+        # sandbox state reconstructed from the workers, not persistence
+        assert leader.functions[n].ready_count >= 1
+    assert sum(len(s.worker_last_hb) for s in leader.shards) == 16
+    warm = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=12.0)
+    assert all(not i.failed for i in warm)
+
+
+def test_cross_shard_reconcile_halts_on_leadership_loss():
+    """Regression: eviction fan-out processes are not in the CP's loop list,
+    so stop() cannot kill them — a leader deposed mid-fan-out must not keep
+    making scaling decisions against the shared workers."""
+    env, cl = make_cluster(cp_shards=4, n_workers=8, n_control_planes=1)
+    names = [f"f{i}" for i in range(8)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80,
+                                  scaling=ScalingConfig(stable_window=120,
+                                                        scale_to_zero_grace=120)))
+    invs = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    # a fan-out message is in flight (its cp_cross_shard_op handoff pending)
+    # when the leader is deposed: it must do nothing once it fires
+    target = next(s for s in leader.shards if s.functions)
+    env.process(leader._cross_shard_reconcile(target,
+                                              list(target.functions)),
+                name="xshard-inflight")
+    r0 = cl.collector.reconciles
+    leader.stop()
+    env.run(until=env.now + 5.0)
+    # no CP is alive (single replica): any further reconcile would be the
+    # dead leader's fan-out still mutating shared cluster state
+    assert cl.collector.reconciles == r0
+
+
+def test_eviction_fanout_targets_only_affected_foreign_functions():
+    """An eviction must hand foreign shards only the functions that actually
+    lost sandboxes on the dead worker (spills), not a full reconcile of every
+    shard — unaffected functions are the autoscale loops' business."""
+    env, cl = make_cluster(cp_shards=4, n_workers=4)
+    # one worker per shard: force f's second sandbox to spill cross-shard
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=300, scale_to_zero_grace=300,
+                              cpu_req_millis=6000, mem_req_mb=1024)))
+    invs = [cl.invoke("f", exec_time=5.0) for _ in range(2)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    k = stable_hash("f") % 4
+    spilled = [sb for sb in leader.functions["f"].sandboxes.values()
+               if sb.worker_id % 4 != k]
+    assert spilled, "no cross-shard spill to evict"
+    wid = spilled[0].worker_id
+    owner = leader._worker_shard(wid)
+    fanouts = []
+    orig = leader._cross_shard_reconcile
+
+    def spy(shard, fns):
+        fanouts.append((shard.shard_id, list(fns)))
+        return orig(shard, fns)
+
+    leader._cross_shard_reconcile = spy
+    ev = env.process(leader._evict_worker(owner, wid), name="evict")
+    env.run_until_event(ev)
+    env.run(until=env.now + 1.0)
+    # exactly one targeted fan-out: to f's owning shard, for f alone
+    assert fanouts == [(k, ["f"])]
+
+
+def test_scale_lock_convoy_shrinks_with_shards():
+    """The C1 convoy is measurable: at a churn rate one lock cannot absorb,
+    sharding the CP divides the accumulated scale-lock wait time."""
+    def lock_wait(cp_shards):
+        env = Environment(seed=7)
+        cl = Cluster(env, n_workers=64, runtime="firecracker",
+                     cp_shards=cp_shards)
+        cl.start()
+        leader = cl.control_plane_leader()
+        names = [f"f{i}" for i in range(600)]
+        _preload(cl, names, COLD_SCALING)
+
+        def driver(env):
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+                yield env.timeout(1.0 / 3000.0)   # 3000/s > one lock's ~2700/s
+
+        env.process(driver(env), name="driver")
+        env.run(until=10.0)
+        return sum(s.lock_wait_s for s in leader.shards)
+
+    w1, w4 = lock_wait(1), lock_wait(4)
+    assert w1 > 0.0
+    assert w4 < w1 / 2, f"sharding did not relieve the convoy: {w1} -> {w4}"

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Offline markdown link checker (no deps, no network).
+
+Walks the given files/directories for ``*.md``, extracts inline links and
+images ``[text](target)``, and verifies that every *relative* target exists
+on disk (anchors are stripped; ``http(s)``/``mailto`` targets are skipped —
+CI has no network guarantee). Exits non-zero listing every broken link.
+
+Usage:  python tools/check_markdown_links.py README.md docs CHANGES.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline link/image: [text](target) — target up to the first unescaped ')';
+# skips reference-style and autolinks, which this repo doesn't use
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+(?:\([^()]*\)[^()\s]*)*)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(root, n)
+        elif p.endswith(".md"):
+            yield p
+        else:
+            print(f"warning: skipping non-markdown argument {p!r}",
+                  file=sys.stderr)
+
+
+def check_file(path: str) -> list:
+    broken = []
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    # blank out fenced code blocks (their bracket/paren text is not a link)
+    # preserving newlines so reported line numbers stay correct
+    text = re.sub(r"```.*?```",
+                  lambda m: "\n" * m.group(0).count("\n"), text, flags=re.S)
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:                      # pure in-page anchor
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            line = text[:m.start()].count("\n") + 1
+            broken.append((path, line, target))
+    return broken
+
+
+def main(argv) -> int:
+    paths = argv or ["README.md", "docs"]
+    files = list(md_files(paths))
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    broken = []
+    for f in files:
+        broken.extend(check_file(f))
+    for path, line, target in broken:
+        print(f"{path}:{line}: broken link -> {target}")
+    print(f"checked {len(files)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
