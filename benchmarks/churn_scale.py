@@ -18,7 +18,15 @@ workload against ``cp_shards`` in {1, 2, 4, ...}. With one shard the modeled
 scale lock caps creations at ~2700/s (C1) and 5000 workers' heartbeats eat
 into that budget (C9); the sweep records how modeled creation throughput,
 tail latency and accumulated lock-convoy time move as the CP is partitioned
-(core/control_plane.py).
+(core/control_plane.py),
+
+plus a skewed-popularity sweep at the same regime: function popularity is
+Zipf (the Azure-trace shape, Shahrad et al.) and each function's traffic
+arrives as periodic cold bursts, so sandbox-creation load concentrates on
+the shards that own the popular functions. The static ``stable_hash % N``
+partition convoys on the hot shard; the sweep records shards 1→8 with the
+load-adaptive rebalancer + work-stealing spill off vs on
+(``cp_rebalance_enabled``, core/control_plane.py).
 
 Emits ``BENCH_churn.json`` (schema in docs/benchmarks.md). ``--smoke`` runs
 a seconds-scale subset (CI).
@@ -28,6 +36,8 @@ from __future__ import annotations
 import argparse
 import json
 import time
+
+import numpy as np
 
 if __package__ in (None, ""):          # `python benchmarks/churn_scale.py`
     import os
@@ -91,13 +101,6 @@ def churn_point(n_workers: int, rate: float, duration: float,
     wall = time.perf_counter() - t0
     events = env.events_processed - ev0
     stats = latency_stats(invs, "e2e_latency")
-    # modeled autoscale/reconcile throughput: creations per *simulated*
-    # second over the window creations actually happened in — this is the
-    # C1 ceiling the CP shards raise (wall-clock columns answer the separate
-    # "is Python the bottleneck" question)
-    created_ts = [t for t, k, _ in cl.collector.events
-                  if k == "sandbox-created"]
-    span = (created_ts[-1] - created_ts[0]) if len(created_ts) > 1 else 0.0
     leader = cl.control_plane_leader()
     return {
         "workers": n_workers, "rate": rate, "duration": duration,
@@ -106,14 +109,99 @@ def churn_point(n_workers: int, rate: float, duration: float,
         "events": events, "events_per_wall_s": round(events / wall, 1),
         "creations": cl.collector.sandbox_creations,
         "creations_per_wall_s": round(cl.collector.sandbox_creations / wall, 1),
-        "creations_per_sim_s": (round((len(created_ts) - 1) / span, 1)
-                                if span > 0 else None),
+        # wall-clock columns answer the separate "is Python the bottleneck"
+        # question; this is the modeled ceiling
+        "creations_per_sim_s": creations_per_sim_s(cl.collector),
         "reconciles": cl.collector.reconciles,
         "lock_wait_sim_s": (round(sum(s.lock_wait_s for s in leader.shards), 4)
                             if leader else None),
         "done": stats["done"], "total": stats["total"],
         "p50_ms": round(stats["p50"] * 1e3, 3),
         "p99_ms": round(stats["p99"] * 1e3, 3),
+    }
+
+
+def zipf_weights(n: int, s: float) -> np.ndarray:
+    w = np.arange(1, n + 1, dtype=np.float64) ** (-s)
+    return w / w.sum()
+
+
+def creations_per_sim_s(collector):
+    """Modeled creation throughput over the window creations actually
+    happened in — the C1 ceiling the CP shards raise."""
+    ts = [t for t, k, _ in collector.events if k == "sandbox-created"]
+    span = (ts[-1] - ts[0]) if len(ts) > 1 else 0.0
+    return round((len(ts) - 1) / span, 1) if span > 0 else None
+
+
+def skew_point(n_workers: int, rate: float, duration: float,
+               n_functions: int = 128, zipf_s: float = 1.2,
+               burst_period: float = 4.0, seed: int = 91,
+               cp_shards: int = 1, rebalance: bool = False) -> dict:
+    """One skew cell: Zipf-popularity function mix, unison cold bursts.
+
+    Function *i* owns a Zipf(s) share of the offered rate and receives it as
+    one *instantaneous* burst per ``burst_period`` (the timer-triggered
+    unison-burst shape of the Azure trace §5.3, all functions in phase).
+    The period is long enough for every function to scale fully back to zero
+    between waves (grace 0.2 s + the 2 s autoscale tick + drain), so each
+    wave is a pure cold scale-up of burst size: per-shard sandbox-creation
+    load is proportional to the popularity share the shard's functions hold
+    — maximally skewed under static hashing — and the wave drains at the
+    shard's scale-lock rate, which is exactly what couples the hot shard's
+    lock convoy into request latency. Latency stats skip the first two waves
+    (warm-up: the rebalancer needs a wave of signal before it reacts).
+    Records the per-shard lock-convoy split plus the rebalancer /
+    work-stealing counters next to the usual churn accounting."""
+    env = Environment(seed=seed)
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
+                       cp_shards=cp_shards, cp_rebalance_enabled=rebalance)
+    weights = zipf_weights(n_functions, zipf_s)
+    names = [f"z{i}" for i in range(n_functions)]
+    per_period = rate * burst_period
+    plan = []
+    for i, name in enumerate(names):
+        burst = int(round(weights[i] * per_period))
+        if burst == 0:
+            continue
+        t = 0.05
+        while t < duration:
+            plan.extend((t, name, 0.1) for _ in range(burst))
+            t += burst_period
+    plan.sort()
+    preload_functions(cl, names, SWEEP_SCALING)
+    ev0, t0 = env.events_processed, time.perf_counter()
+    # plan times are offsets from *traffic start*, which is env.now after
+    # the O(n_workers)-fsyncs boot — the warmup cut must use the same origin
+    # or it silently no-ops (or over-cuts) at large n_workers
+    traffic_t0 = env.now
+    invs = run_open_loop(env, cl, plan, until_extra=15.0)
+    wall = time.perf_counter() - t0
+    warmup = min(2 * burst_period, duration / 2)
+    stats = latency_stats([i for i in invs
+                           if i.arrival - traffic_t0 >= warmup],
+                          "e2e_latency")
+    leader = cl.control_plane_leader()
+    lock_waits = sorted((s.lock_wait_s for s in leader.shards), reverse=True)
+    return {
+        "workers": n_workers, "rate": rate, "duration": duration,
+        "n_functions": n_functions, "zipf_s": zipf_s,
+        "burst_period": burst_period, "warmup": warmup,
+        "cp_shards": cp_shards,
+        "rebalance": rebalance, "offered": len(plan),
+        "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
+        "events": env.events_processed - ev0,
+        "creations": cl.collector.sandbox_creations,
+        "creations_per_sim_s": creations_per_sim_s(cl.collector),
+        "fn_migrations": cl.collector.fn_migrations,
+        "steals": cl.collector.steals,
+        "steal_probes": cl.collector.steal_probes,
+        "lock_wait_sim_s": round(sum(lock_waits), 4),
+        "lock_wait_hottest_shard_s": round(lock_waits[0], 4),
+        "done": stats["done"], "total": stats["total"],
+        "p50_ms": round(stats["p50"] * 1e3, 3),
+        "p99_ms": round(stats["p99"] * 1e3, 3),
+        "mean_ms": round(stats["mean"] * 1e3, 3),
     }
 
 
@@ -182,6 +270,31 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
               f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
               f"done={cell['done']}/{cell['total']}", flush=True)
 
+    # -- skewed-popularity sweep (hot-shard regime; rebalance off vs on) ----
+    # Zipf mix: static hashing piles the popular functions' creation bursts
+    # onto one shard's scale lock; the load-adaptive CP spreads them
+    if smoke:
+        skew_cells = [(500, 1000.0, 8.0, 1, False),
+                      (500, 1000.0, 8.0, 4, False),
+                      (500, 1000.0, 8.0, 4, True)]
+    else:
+        skew_cells = [(5000, 2500.0, 20.0, s, rb)
+                      for s in (1, 2, 4, 8) for rb in (False, True)
+                      if not (s == 1 and rb)]
+    result["skew_sweep"] = []
+    for n_workers, rate, duration, s, rb in skew_cells:
+        cell = skew_point(n_workers, rate, duration,
+                          cp_shards=s, rebalance=rb)
+        result["skew_sweep"].append(cell)
+        print(f"workers={n_workers} zipf rate={rate:.0f} cp_shards={s} "
+              f"rebalance={'on' if rb else 'off'}: "
+              f"{cell['creations_per_sim_s']} creations/sim_s, "
+              f"hot_lock_wait={cell['lock_wait_hottest_shard_s']}s, "
+              f"migrations={cell['fn_migrations']} steals={cell['steals']}, "
+              f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
+              f"mean={cell['mean_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -211,6 +324,15 @@ def run(reporter, quick: bool = True) -> dict:
             f"p99_ms={cell['p99_ms']};"
             f"creations_per_sim_s={cell['creations_per_sim_s']};"
             f"lock_wait_sim_s={cell['lock_wait_sim_s']}")
+    for cell in result.get("skew_sweep", []):
+        reporter.add(
+            f"churn/skew/shards={cell['cp_shards']}"
+            f"/rebalance={'on' if cell['rebalance'] else 'off'}",
+            cell["p50_ms"] * 1e3,
+            f"p99_ms={cell['p99_ms']};"
+            f"creations_per_sim_s={cell['creations_per_sim_s']};"
+            f"hot_lock_wait_s={cell['lock_wait_hottest_shard_s']};"
+            f"migrations={cell['fn_migrations']};steals={cell['steals']}")
     return result
 
 

@@ -9,6 +9,24 @@ windows — a 60 s *stable* window and a 6 s *panic* window. If the panic
 desired count is >= 2x the current ready count, the autoscaler enters panic
 mode and never scales down while panicking. Scale-to-zero happens only after
 the stable window average is zero for the scale-to-zero grace period.
+
+Mechanism → paper section map (claim ids C1..C12 as in costmodel.py):
+
+  * ``ConcurrencyWindow`` — the KPA stable/panic averaging windows, fed by
+    the DP metric pushes (§3.2: periodic every 250 ms + urgent on queue
+    formation). Sampling is per-function, which is why metric ingestion
+    needs no CP lock.
+  * ``FunctionAutoscalerState.desired`` — §4 "Scheduling policies": the
+    per-function decision the control plane's reconcile loop acts on every
+    ``autoscale_period`` (2 s). Acting on the decision — not computing it —
+    is what serializes on the CP scale lock (C1); under a skewed function
+    mix that lock pressure is what the load-adaptive sharded CP rebalances
+    (control_plane.py).
+  * ``no_downscale_until`` — §3.4.1 post-recovery hold: a recovering leader
+    must not scale down on a partial view (``recovery_no_downscale``, 60 s).
+  * ``max_scale`` / panic no-downscale — Knative semantics kept exactly so
+    the Dirigent model and the Knative baseline share one implementation
+    (apples-to-apples, §5 methodology).
 """
 from __future__ import annotations
 

@@ -20,6 +20,15 @@ reproduces the paper's single-lock CP bit-identically. ``placement_policy``
 selects node scoring (core/policies.py); with ``cp_shards > 1`` the CP
 always composes a ``PartitionedPlacer`` whose partitions align with the CP
 shards so placements stay shard-local on the hot path.
+
+Load-adaptive sharding knobs (``cp_rebalance_*``): with
+``cp_rebalance_enabled=True`` the leader CP runs a periodic rebalancer that
+migrates hot functions off the hottest shard via an explicit handoff,
+keeping a skewed (Zipf-popularity) function mix from convoying on one scale
+lock; ``cp_rebalance_period`` / ``cp_rebalance_hot_factor`` /
+``cp_rebalance_max_moves`` override the ``DirigentCosts`` defaults. The
+default (off) keeps the static hash partition bit-identically. Operator
+guidance for all of these lives in docs/operations.md.
 """
 from __future__ import annotations
 
@@ -50,6 +59,10 @@ class Cluster:
                  lb_policy: str = "least_loaded",
                  placement_policy: str = "balanced",
                  cp_shards: int = 1,
+                 cp_rebalance_enabled: bool = False,
+                 cp_rebalance_period: Optional[float] = None,
+                 cp_rebalance_hot_factor: Optional[float] = None,
+                 cp_rebalance_max_moves: Optional[int] = None,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
@@ -66,7 +79,11 @@ class Cluster:
             ControlPlane(env, i, self.costs, self, self.store, self.collector,
                          persist_sandbox_state=persist_sandbox_state,
                          placement_policy=placement_policy,
-                         cp_shards=cp_shards)
+                         cp_shards=cp_shards,
+                         rebalance_enabled=cp_rebalance_enabled,
+                         rebalance_period=cp_rebalance_period,
+                         rebalance_hot_factor=cp_rebalance_hot_factor,
+                         rebalance_max_moves=cp_rebalance_max_moves)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [

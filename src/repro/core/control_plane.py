@@ -23,33 +23,58 @@ module shards the control plane itself. The CP is partitioned into
   * its own health monitor over the workers it owns, and
   * its own CP→DP endpoint-update flush queue.
 
-Functions hash to a shard with ``simcore.stable_hash(name) % cp_shards``;
-workers map to the shard ``worker_id % cp_shards`` — the same partition the
-``PartitionedPlacer`` uses, so a shard's sandbox creation scores only its own
-workers and a placement never crosses shards on the hot path. Cross-shard
-concerns take explicit fan-out paths, each paying ``cp_cross_shard_op`` per
-foreign shard touched instead of one global critical section:
+Functions route to shards through an **indirection table**
+(``fn_shard_table``): every installed function gets an entry, seeded with
+``simcore.stable_hash(name) % cp_shards``, and the load-adaptive rebalancer
+(below) may later repoint it. Workers map to the shard
+``worker_id % cp_shards`` — the same partition the ``PartitionedPlacer``
+uses, so a shard's sandbox creation scores only its own workers and a
+placement never crosses shards on the hot path. Cross-shard concerns take
+explicit fan-out paths, each paying ``cp_cross_shard_op`` per foreign shard
+touched instead of one global critical section:
 
-  * capacity spill — a shard whose own workers are full probes the other
-    placer shards round-robin (off the common case, still correct);
+  * capacity spill — a shard whose own workers are full *steals* capacity
+    from foreign placer shards, probing them least-loaded-first by the same
+    per-shard load signal the rebalancer uses; shards that recently failed a
+    probe are back-offed to the end of the order, so a saturated cluster
+    degrades to the deterministic round-robin probe sequence;
   * worker eviction — the owning shard detects the missed heartbeats, then
     fans the affected functions' reconciles out to their owning shards;
+  * function migration — the rebalancer's handoff (quiesce both shards →
+    move function state + pending endpoint-flush entries → repoint the
+    indirection table → persist the override off the critical path);
   * leader recovery — ``recover_as_leader`` rebuilds every shard's function
-    and worker maps from the persisted records in one pass.
+    and worker maps from the persisted records in one pass, **including the
+    indirection table**: persisted ``shardmap/`` overrides are re-applied so
+    a failover does not silently undo the rebalancer's work.
+
+Load-adaptive rebalancing (``cp_rebalance_enabled``, default off). A static
+``stable_hash % N`` partition convoys on one shard when function popularity
+is skewed (an Azure-style Zipf mix — exactly the regime the paper's 2500
+creations/s claim targets). Each shard exports a cheap load signal — an
+EWMA of its recent scale-lock wait windows (folded by its health loop) plus
+the expected wait implied by the current lock queue — and a periodic
+rebalancer loop migrates the hottest functions (by per-function creation
+heat) from the hottest shard to the coldest whenever the imbalance exceeds
+``cp_rebalance_hot_factor``. Everything is deterministic; knobs live in
+``DirigentCosts`` (``cp_rebalance_*``, ``cp_steal_backoff``) and are
+documented in docs/operations.md.
 
 Metric ingestion from DPs needs no lock in this model (autoscaler windows
 are per-function); the urgent fast path reconciles under the function's
 owning shard only. ``cp_shards=1`` (the default) degenerates to exactly the
 pre-shard control plane — one lock, one autoscale loop, one health loop, one
 flush queue, same event sequence — which tests pin bit-identically against
-recorded fig7/fig8 goldens (tests/test_cp_sharding.py).
+recorded fig7/fig8 goldens, and with rebalancing off (the default) the
+indirection-table path itself is pinned bit-identical to the static-hash CP
+at ``cp_shards=4`` (tests/test_cp_sharding.py).
 """
 from __future__ import annotations
 
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Generator, List, Tuple, TYPE_CHECKING
+from typing import Deque, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
 
 from repro.core.abstractions import (
     Function, Sandbox, SandboxState, WorkerNodeInfo,
@@ -70,6 +95,11 @@ class FunctionState:
     autoscaler: FunctionAutoscalerState
     sandboxes: Dict[int, Sandbox] = field(default_factory=dict)
     creating: int = 0
+    # rebalancer signals: ``heat`` counts sandbox creations (the scale-lock
+    # work a function charges its shard), halved each rebalance tick;
+    # ``cooldown_until`` rate-limits re-migrating the same function
+    heat: float = 0.0
+    cooldown_until: float = 0.0
 
     @property
     def ready_count(self) -> int:
@@ -92,7 +122,8 @@ class ControlPlaneShard:
     """
 
     __slots__ = ("shard_id", "functions", "worker_last_hb", "scale_lock",
-                 "ep_updates", "ep_flush_scheduled", "lock_wait_s")
+                 "ep_updates", "ep_flush_scheduled", "lock_wait_s",
+                 "lock_wait_snap", "load_ema", "steal_backoff_until")
 
     def __init__(self, env: Environment, shard_id: int):
         self.shard_id = shard_id
@@ -102,6 +133,18 @@ class ControlPlaneShard:
         self.ep_updates: Deque[Tuple[str, str, object, bool]] = deque()
         self.ep_flush_scheduled = False
         self.lock_wait_s = 0.0
+        # load-signal window marker: lock wait accumulated before the last
+        # rebalance tick is history, not current load
+        self.lock_wait_snap = 0.0
+        # exponentially-weighted lock-wait window (folded by the shard's
+        # health loop every worker_heartbeat_period): bursty workloads make
+        # a single window phase-noisy — a shard can look idle the tick after
+        # its burst drained — so hot/cold ordering and the steal order use
+        # this smoothed view
+        self.load_ema = 0.0
+        # work-stealing backoff: a failed capacity probe of this shard
+        # demotes it to the end of the victim order until this instant
+        self.steal_backoff_until = 0.0
 
 
 class ControlPlane:
@@ -109,7 +152,11 @@ class ControlPlane:
                  cluster: "Cluster", store, collector: Collector,
                  persist_sandbox_state: bool = False,
                  placement_policy: str = "balanced",
-                 cp_shards: int = 1):
+                 cp_shards: int = 1,
+                 rebalance_enabled: bool = False,
+                 rebalance_period: Optional[float] = None,
+                 rebalance_hot_factor: Optional[float] = None,
+                 rebalance_max_moves: Optional[int] = None):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -128,16 +175,56 @@ class ControlPlane:
         self.cp_shards = max(1, cp_shards)
         self.shards: List[ControlPlaneShard] = [
             ControlPlaneShard(env, k) for k in range(self.cp_shards)]
+        # indirection table: function name -> owning shard id. Seeded with
+        # ``stable_hash(name) % cp_shards`` at install; the rebalancer may
+        # repoint entries (persisted as ``shardmap/<name>`` overrides).
+        self.fn_shard_table: Dict[str, int] = {}
         self.placer = self._make_placer()
         self._sandbox_ids = itertools.count(1)
         self._loops = []
         self.no_downscale_until = 0.0
+        # load-adaptive rebalancing knobs (resolved against the cost model;
+        # a single shard has nothing to rebalance)
+        self.rebalance_enabled = bool(rebalance_enabled) and self.cp_shards > 1
+        self.rebalance_period = (costs.cp_rebalance_period
+                                 if rebalance_period is None
+                                 else rebalance_period)
+        self.rebalance_hot_factor = (costs.cp_rebalance_hot_factor
+                                     if rebalance_hot_factor is None
+                                     else rebalance_hot_factor)
+        self.rebalance_max_moves = (costs.cp_rebalance_max_moves
+                                    if rebalance_max_moves is None
+                                    else rebalance_max_moves)
+        self._migration_inflight = False
 
     # -- shard routing ---------------------------------------------------------------
+    def _default_shard_id(self, name: str) -> int:
+        if self.cp_shards == 1:
+            return 0
+        return stable_hash(name) % self.cp_shards
+
+    def _fn_shard_id(self, name: str) -> int:
+        k = self.fn_shard_table.get(name)
+        if k is None:
+            k = self._default_shard_id(name)
+        return k
+
     def _fn_shard(self, name: str) -> ControlPlaneShard:
         if self.cp_shards == 1:
             return self.shards[0]
-        return self.shards[stable_hash(name) % self.cp_shards]
+        return self.shards[self._fn_shard_id(name)]
+
+    def shard_load(self, shard: ControlPlaneShard) -> float:
+        """Cheap per-shard load signal (seconds of scale-lock pressure):
+        the EWMA of recent lock-wait windows plus the expected wait implied
+        by the current lock queue. The window/EWMA maintenance rides the
+        shard's health loop (always running on a leader, rebalancing on or
+        off), so the work-stealing spill and the ``dirigent_cp_shard_load``
+        gauge rank shards by *recent* load — not lifetime history. Shared by
+        the rebalancer (hot/cold shard selection) and the work-stealing
+        spill (least-loaded victim ordering)."""
+        return (shard.load_ema
+                + shard.scale_lock.queue_len * self.costs.cp_scale_lock_hold)
 
     def _worker_shard(self, worker_id: int) -> ControlPlaneShard:
         # same partition as PartitionedPlacer._shard, so the workers a shard
@@ -174,6 +261,10 @@ class ControlPlane:
             self._loops.append(self.env.process(
                 self._health_loop(shard),
                 name=f"cp{self.cp_id}-health-{shard.shard_id}"))
+        if self.rebalance_enabled:
+            self._loops.append(self.env.process(
+                self._rebalance_loop(),
+                name=f"cp{self.cp_id}-rebalance"))
 
     def stop(self) -> None:
         self.alive = False
@@ -186,12 +277,15 @@ class ControlPlane:
 
     # -- user API --------------------------------------------------------------------
     def install_function(self, fn: Function) -> FunctionState:
-        """Insert a function into the registry and its owning shard, with no
-        modeled cost (registration bypass for benchmarks / recovery)."""
+        """Insert a function into the registry, the indirection table and its
+        owning shard, with no modeled cost (registration bypass for
+        benchmarks / recovery)."""
         st = FunctionState(function=fn,
                            autoscaler=FunctionAutoscalerState(fn.scaling))
         self.functions[fn.name] = st
-        self._fn_shard(fn.name).functions[fn.name] = st
+        k = self.fn_shard_table.setdefault(fn.name,
+                                           self._default_shard_id(fn.name))
+        self.shards[k].functions[fn.name] = st
         return st
 
     def register_function(self, fn: Function) -> Generator:
@@ -211,6 +305,11 @@ class ControlPlane:
         yield from self.store.write(f"function/{name}", None)
         st = self.functions.pop(name, None)
         self._fn_shard(name).functions.pop(name, None)
+        k = self.fn_shard_table.pop(name, None)
+        if (self.rebalance_enabled and k is not None
+                and k != self._default_shard_id(name)):
+            # the function had been migrated: drop its durable override too
+            yield from self.store.write(f"shardmap/{name}", None)
         if st:
             for sb in list(st.sandboxes.values()):
                 yield from self._teardown_sandbox(st, sb)
@@ -329,29 +428,61 @@ class ControlPlane:
         Sharded CPs score their own placer partition — the workers this same
         shard health-checks — so the hot path never leaves the shard; only
         when the shard's workers are full does the placement spill to foreign
-        partitions, paying ``cp_cross_shard_op`` per shard probed."""
+        partitions, paying ``cp_cross_shard_op`` per shard probed.
+
+        The spill is *work stealing*: victims are probed least-loaded-first
+        by ``shard_load`` (the rebalancer's signal), so a convoy never forms
+        on one deterministic victim. A probe that finds no capacity back-offs
+        its shard (``cp_steal_backoff``) to the end of the order; ties and
+        fully backed-off clusters fall back to the round-robin offset order,
+        so a saturated cluster degrades to the pre-steal probe sequence."""
         if self.cp_shards == 1:
             return self.placer.place(cpu, mem)
         k = shard.shard_id
         wid = self.placer.shards[k].place(cpu, mem)
         if wid is not None:
             return wid
-        for off in range(1, self.cp_shards):       # cross-shard capacity spill
+        now = self.env.now
+        shards = self.shards
+
+        def steal_rank(off: int) -> Tuple[bool, float, int]:
+            victim = shards[(k + off) % self.cp_shards]
+            return (victim.steal_backoff_until > now,
+                    self.shard_load(victim), off)
+
+        for off in sorted(range(1, self.cp_shards), key=steal_rank):
             yield self.env.timeout(self.costs.cp_cross_shard_op)
-            wid = self.placer.shards[(k + off) % self.cp_shards].place(cpu, mem)
+            self.collector.steal_probes += 1
+            victim_id = (k + off) % self.cp_shards
+            wid = self.placer.shards[victim_id].place(cpu, mem)
             if wid is not None:
+                self.collector.steals += 1
                 return wid
+            shards[victim_id].steal_backoff_until = \
+                self.env.now + self.costs.cp_steal_backoff
         return None
 
     def _create_sandbox(self, st: FunctionState) -> Generator:
         fn = st.function
-        shard = self._fn_shard(fn.name)
+        # rebalancer heat: one creation = one scale-lock hold charged to the
+        # owning shard on this function's behalf (decayed each rebalance tick)
+        st.heat += 1.0
         try:
             # the shard's slice of the autoscaling/cluster-state structures
-            # (C1 bottleneck; global when cp_shards == 1)
-            t0 = self.env.now
-            yield shard.scale_lock.acquire()
-            shard.lock_wait_s += self.env.now - t0
+            # (C1 bottleneck; global when cp_shards == 1). A migration
+            # handoff may repoint the function while we queue on the lock —
+            # re-check ownership after acquiring and chase the function to
+            # its new shard, so a creation never runs against a slice the
+            # function left (once we hold the current owner's lock, a
+            # further move is impossible: the handoff needs this lock too).
+            while True:
+                shard = self._fn_shard(fn.name)
+                t0 = self.env.now
+                yield shard.scale_lock.acquire()
+                shard.lock_wait_s += self.env.now - t0
+                if self._fn_shard(fn.name) is shard:
+                    break
+                shard.scale_lock.release()
             try:
                 yield self.env.timeout(self.costs.cp_scale_lock_hold)
                 wid = yield from self._place(shard, fn.scaling.cpu_req_millis,
@@ -439,6 +570,9 @@ class ControlPlane:
         one batched broadcast to all DPs."""
         shard = self._fn_shard(fn)
         shard.ep_updates.append((op, fn, payload, drain))
+        self._schedule_ep_flush(shard)
+
+    def _schedule_ep_flush(self, shard: ControlPlaneShard) -> None:
         if not shard.ep_flush_scheduled:
             shard.ep_flush_scheduled = True
             self.env.process(
@@ -470,6 +604,14 @@ class ControlPlane:
         c = self.costs
         while True:
             yield self.env.timeout(c.worker_heartbeat_period)
+            # fold the lock-wait window into the shard's load EWMA here —
+            # pure arithmetic piggybacked on an existing tick (no new
+            # events, so cp_shards=1 stays bit-identical) that runs whether
+            # or not the rebalancer is enabled: stealing and monitoring see
+            # recent load, not lifetime history
+            window = shard.lock_wait_s - shard.lock_wait_snap
+            shard.lock_wait_snap = shard.lock_wait_s
+            shard.load_ema = 0.7 * shard.load_ema + window
             now = self.env.now
             for wid, last in list(shard.worker_last_hb.items()):
                 if now - last > c.worker_heartbeat_timeout:
@@ -527,21 +669,199 @@ class ControlPlane:
         self._worker_shard(wid).worker_last_hb[wid] = self.env.now
         self.placer.set_schedulable(wid, True)
 
+    # -- load-adaptive shard rebalancing -----------------------------------------------------
+    def _rebalance_loop(self) -> Generator:
+        """Periodic hot-shard rebalancer (``cp_rebalance_enabled``).
+
+        Each tick: read every shard's smoothed load (the health loops fold
+        lock-wait windows into a per-shard EWMA — bursty workloads make a
+        single window phase-noisy), and — when the hottest shard's load
+        exceeds ``cp_rebalance_hot_factor`` times the coldest's — migrate
+        its hottest functions to the coldest shard. Function heat halves
+        each tick so the signal tracks *recent* creations. Only one
+        migration handoff is in flight at a time; everything is
+        deterministic (ties break on shard id / function name)."""
+        c = self.costs
+        while True:
+            yield self.env.timeout(self.rebalance_period)
+            if self._migration_inflight:
+                self._decay_heat()
+                continue
+            # the load EWMA itself is maintained by each shard's health loop
+            loads = [(self.shard_load(s), s.shard_id) for s in self.shards]
+            hot_load, hot_id = max(loads, key=lambda x: (x[0], -x[1]))
+            cold_load, cold_id = min(loads)
+            if (hot_id == cold_id or hot_load < c.cp_rebalance_min_load
+                    or hot_load <= self.rebalance_hot_factor * cold_load):
+                self._decay_heat()
+                continue
+            hot = self.shards[hot_id]
+            total_heat = sum(st.heat for st in hot.functions.values())
+            # second gate, in *heat* (creation-count) terms: lock wait is
+            # superlinear near saturation, so the wait ratio alone can trip
+            # on a small real load gap (classic with 2 shards) and migration
+            # then just ping-pongs the hotspot. Heat is linear in load —
+            # require the same factor there before moving anything.
+            cold_heat = sum(st.heat for st in
+                            self.shards[cold_id].functions.values())
+            if total_heat <= self.rebalance_hot_factor * cold_heat:
+                self._decay_heat()
+                continue
+            names: List[str] = []
+            if total_heat > 0.0:
+                # move hottest-first, but only functions whose projected load
+                # share still closes the hot-cold gap — moving a function
+                # whose share exceeds the remaining gap would just relocate
+                # (or invert) the hotspot instead of spreading it
+                gap = hot_load - cold_load
+                movers = sorted(hot.functions.items(),
+                                key=lambda kv: (-kv[1].heat, kv[0]))
+                now = self.env.now
+                moved_heat = 0.0
+                for name, st in movers:
+                    if len(names) >= self.rebalance_max_moves or st.heat <= 0:
+                        break
+                    if now < st.cooldown_until:
+                        continue
+                    fn_load = hot_load * st.heat / total_heat
+                    if fn_load >= gap:
+                        continue
+                    names.append(name)
+                    moved_heat += st.heat
+                    gap -= 2.0 * fn_load
+            self._decay_heat()
+            if names:
+                self._migration_inflight = True
+                self.env.process(
+                    self._migrate_functions(
+                        hot, self.shards[cold_id], names,
+                        ema_delta=hot.load_ema * moved_heat / total_heat),
+                    name=f"cp{self.cp_id}-migrate-{hot_id}-{cold_id}")
+
+    def _decay_heat(self) -> None:
+        for shard in self.shards:
+            for st in shard.functions.values():
+                st.heat *= 0.5
+
+    def _migrate_functions(self, src: ControlPlaneShard,
+                           dst: ControlPlaneShard,
+                           names: List[str],
+                           ema_delta: float = 0.0) -> Generator:
+        """Explicit migration handoff: quiesce → move → publish → persist.
+
+        Quiesce takes *both* shards' scale locks (in shard-id order, so two
+        concurrent handoffs cannot deadlock) — no creation can run against
+        either slice while function state moves. The move carries the
+        ``FunctionState`` and any endpoint-flush entries still queued for the
+        function, then repoints the indirection table. The durable
+        ``shardmap/`` override is written only after the locks are released —
+        persistence stays off the critical path (paper §3.2), and
+        ``recover_as_leader`` replays it so failover keeps the adapted
+        partition. A deposed leader aborts without touching shared state."""
+        moved: List[str] = []
+        try:
+            if not (self.alive and self.is_leader):
+                return
+            first, second = sorted((src, dst), key=lambda s: s.shard_id)
+            t0 = self.env.now
+            yield first.scale_lock.acquire()
+            first.lock_wait_s += self.env.now - t0
+            t0 = self.env.now
+            yield second.scale_lock.acquire()
+            second.lock_wait_s += self.env.now - t0
+            try:
+                # the handoff hop itself (one cross-shard message)
+                yield self.env.timeout(self.costs.cp_cross_shard_op)
+                if not (self.alive and self.is_leader):
+                    return
+                for name in names:
+                    st = src.functions.pop(name, None)
+                    if st is None:       # deregistered/moved since selection
+                        continue
+                    dst.functions[name] = st
+                    self.fn_shard_table[name] = dst.shard_id
+                    st.cooldown_until = (self.env.now
+                                         + self.costs.cp_rebalance_cooldown)
+                    moved.append(name)
+                if moved:
+                    # feed the move forward into the smoothed load signal so
+                    # the next ticks don't keep draining the same (now
+                    # lighter) shard while its EMA still carries the
+                    # pre-migration convoy — scaled by what actually moved
+                    # (a function deregistered while we queued on the locks
+                    # transfers nothing)
+                    if ema_delta > 0.0:
+                        delta = ema_delta * len(moved) / len(names)
+                        src.load_ema -= delta
+                        dst.load_ema += delta
+                    moved_set = set(moved)
+                    carried = [u for u in src.ep_updates
+                               if u[1] in moved_set]
+                    if carried:
+                        # pending endpoint-flush entries follow their function
+                        src.ep_updates = deque(
+                            u for u in src.ep_updates
+                            if u[1] not in moved_set)
+                        dst.ep_updates.extend(carried)
+                        self._schedule_ep_flush(dst)
+                    self.collector.fn_migrations += len(moved)
+                    self.collector.event(
+                        self.env.now, "fn-migrated",
+                        (src.shard_id, dst.shard_id, tuple(moved)))
+            finally:
+                second.scale_lock.release()
+                first.scale_lock.release()
+            # durable indirection-table overrides, off the critical path. A
+            # move back to the hash-default shard tombstones the override
+            # instead (shardmap/ holds only true deviations, so deregister's
+            # cleanup check stays exact); a function deregistered while we
+            # persisted is skipped rather than resurrected as an orphan.
+            for name in moved:
+                if not (self.alive and self.is_leader):
+                    return
+                if name not in self.functions:
+                    continue
+                value = (None if dst.shard_id == self._default_shard_id(name)
+                         else str(dst.shard_id).encode())
+                yield from self.store.write(f"shardmap/{name}", value)
+        finally:
+            self._migration_inflight = False
+
     # -- failover recovery (new leader) ----------------------------------------------------------
     def recover_as_leader(self) -> Generator:
         """Paper §3.4.1: fetch persisted records, reconnect, reconstruct
         sandbox state from worker nodes asynchronously. Rebuilds every
-        shard's function/worker maps from the persisted records."""
+        shard's function/worker maps from the persisted records — including
+        the shard indirection table: install seeds hash defaults, then the
+        persisted ``shardmap/`` overrides are replayed so a failover does not
+        silently undo the rebalancer's migrations."""
         c = self.costs
         yield self.env.timeout(c.cp_recovery_db_fetch)
         func_records = yield from self.store.read_prefix("function/")
         worker_records = yield from self.store.read_prefix("worker/")
         self.functions = {}
+        self.fn_shard_table = {}
         for shard in self.shards:
             shard.functions = {}
             shard.worker_last_hb = {}
         for key, rec in func_records.items():
             self.install_function(Function.from_record(rec))
+        if self.rebalance_enabled:
+            shardmap = yield from self.store.read_prefix("shardmap/")
+            for key, rec in shardmap.items():
+                name = key.split("/", 1)[1]
+                st = self.functions.get(name)
+                try:
+                    dst = int(rec.decode())
+                except (ValueError, AttributeError):
+                    continue
+                if st is None or not 0 <= dst < self.cp_shards:
+                    continue
+                cur = self._fn_shard_id(name)
+                if dst != cur:
+                    self.shards[cur].functions.pop(name, None)
+                    self.shards[dst].functions[name] = st
+                self.fn_shard_table[name] = dst
         self.workers = {}
         self.placer = self._make_placer()
         for key, rec in worker_records.items():

@@ -29,10 +29,15 @@ class DirigentCosts:
       shared structures, which is what degrades creation throughput at 5000
       workers (5000 workers × 2 hb/s × 12 µs ≈ 12% of one lock).
     * ``cp_cross_shard_op`` — sharded-CP fan-out hop: the in-memory handoff
-      one shard pays per foreign shard it touches (placement capacity spill,
-      post-eviction reconcile fan-out). Modeled like ``channel_op`` (a Go
-      channel/atomic handoff, no network), slightly dearer for the extra
-      synchronization; it only exists when ``cp_shards > 1``.
+      one shard pays per foreign shard it touches (work-stealing capacity
+      spill, post-eviction reconcile fan-out, function-migration handoff).
+      Modeled like ``channel_op`` (a Go channel/atomic handoff, no network),
+      slightly dearer for the extra synchronization; it only exists when
+      ``cp_shards > 1``.
+    * ``cp_rebalance_*`` / ``cp_steal_backoff`` — load-adaptive sharding
+      policy knobs (hot-shard rebalancing + work-stealing spill); no paper
+      anchor (the paper's CP is the static single-shard configuration).
+      Operator guidance: docs/operations.md.
     * ``grpc_call`` / ``channel_op`` — paper §3: Dirigent components talk
       gRPC across processes but exchange information through in-memory
       channels inside the monolithic CP (vs RPC+etcd round-trips in K8s).
@@ -80,6 +85,32 @@ class DirigentCosts:
     #                                    Unused when cp_shards == 1.
     autoscale_period: float = 2.0      # autoscaler evaluation tick (KPA default)
     recovery_no_downscale: float = 60.0  # paper §3.4.1
+
+    # -- load-adaptive sharding (cp_rebalance_* / work stealing) -------------
+    # These are policy knobs for the load-adaptive sharded CP (the follow-on
+    # to C1/C9 this repo adds; see docs/operations.md for operator guidance).
+    # They model no paper measurement — the paper's CP is the cp_shards=1 /
+    # rebalancing-off configuration — so they only take effect when
+    # ``Cluster(cp_rebalance_enabled=True)`` (rebalancer) or cp_shards > 1
+    # (work-stealing spill) is selected.
+    cp_rebalance_period: float = 1.0   # rebalancer tick: long enough to
+    #                                    smooth burst noise, short enough to
+    #                                    react within a few autoscale periods
+    cp_rebalance_hot_factor: float = 2.0  # migrate only when the hottest
+    #                                    shard's load signal exceeds this
+    #                                    multiple of the coldest's
+    cp_rebalance_max_moves: int = 8    # max functions migrated per handoff
+    cp_rebalance_min_load: float = 1e-3  # hot-shard floor (seconds of lock
+    #                                    wait per tick): below it, imbalance
+    #                                    is noise and migration pure overhead
+    cp_rebalance_cooldown: float = 5.0  # per-function re-migration holdoff:
+    #                                    bounds ping-ponging of a function
+    #                                    whose load dominates every shard
+    cp_steal_backoff: float = 0.05     # a capacity probe that found a victim
+    #                                    shard full demotes it to the end of
+    #                                    the steal order for this long, so a
+    #                                    saturated cluster degrades to the
+    #                                    deterministic round-robin probe
 
     # -- persistence (Redis, AOF fsync always) -------------------------------
     persist_write: float = 0.85e-3     # fsync'd append median (C3 ablation:

@@ -12,6 +12,26 @@ One process-level component owning, for every function steered to it:
 
 The front-end LB steers invocations by function-ID hash, so all invocations
 of a function land on one DP replica and in-flight accounting is centralized.
+
+Mechanism → paper section map (claim ids C1..C12 as in costmodel.py):
+
+  * ``handle`` / ``_dispatch`` — §3.3 warm path: LB hop → DP proxy CPU
+    (``dp_proxy_cpu`` on ``dp_cores``) → ephemeral port from the
+    ``dp_port_pool`` → worker NAT hop. Port exhaustion under sustained load
+    is what caps the warm path at ~4000/s (C5, Fig 8).
+  * ``_metrics_loop`` / urgent push — §3.2 autoscaling inputs: in-flight
+    counts batched to the CP every ``metrics_report_period`` (250 ms), plus
+    an *event-driven* push the instant a queue forms with zero free slots
+    (the cold-start trigger; keeps scale-up off the periodic tick).
+  * dead-endpoint report (``report_dead_sandbox``) — §3.4 stale-state
+    self-healing: a dispatch to a sandbox that died behind the CP's back
+    fails once, evicts the endpoint locally and reconciles via the CP —
+    never an endless failure stream.
+  * ``recover`` — §5.4 DP failover (C11): systemd restart → re-register →
+    pull function/endpoint caches from the CP (~2 s end to end vs ~15 s for
+    the Istio-gateway-bound baseline).
+  * request hedging (``hedge_after``) — §4 pluggable-policy surface, off by
+    default for paper fidelity (policies.py holds the LB policies).
 """
 from __future__ import annotations
 

@@ -32,6 +32,9 @@ class Collector:
     sandbox_creations: int = 0
     sandbox_teardowns: int = 0
     reconciles: int = 0        # autoscale/reconcile decisions taken by the CP
+    fn_migrations: int = 0     # functions moved between CP shards (rebalancer)
+    steal_probes: int = 0      # cross-shard capacity probes paid (spill path)
+    steals: int = 0            # placements satisfied by a foreign shard
 
     def done(self, inv: Invocation) -> None:
         self.invocations.append(inv)

@@ -28,6 +28,12 @@ def render_metrics(cluster: "Cluster") -> str:
     lines.append(f"dirigent_sandbox_teardowns_total {c.sandbox_teardowns}")
     lines.append("# TYPE dirigent_cp_reconciles_total counter")
     lines.append(f"dirigent_cp_reconciles_total {c.reconciles}")
+    lines.append("# TYPE dirigent_cp_fn_migrations_total counter")
+    lines.append(f"dirigent_cp_fn_migrations_total {c.fn_migrations}")
+    lines.append("# TYPE dirigent_cp_steals_total counter")
+    lines.append(f"dirigent_cp_steals_total {c.steals}")
+    lines.append("# TYPE dirigent_cp_steal_probes_total counter")
+    lines.append(f"dirigent_cp_steal_probes_total {c.steal_probes}")
     lines.append("# TYPE dirigent_persistent_writes_total counter")
     lines.append(f"dirigent_persistent_writes_total {cluster.store.write_count}")
 
@@ -47,6 +53,10 @@ def render_metrics(cluster: "Cluster") -> str:
              lambda s: s.scale_lock.queue_len),
             ("dirigent_cp_shard_lock_wait_seconds_total", "counter",
              lambda s: f"{s.lock_wait_s:.6f}"),
+            # the rebalancer/steal load signal: recent lock wait + expected
+            # wait implied by the current lock queue (docs/operations.md)
+            ("dirigent_cp_shard_load", "gauge",
+             lambda s: f"{leader.shard_load(s):.6f}"),
         ]
         for family, kind, value in shard_families:
             lines.append(f"# TYPE {family} {kind}")

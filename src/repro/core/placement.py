@@ -23,8 +23,11 @@ The sharded control plane (core/control_plane.py, ``cp_shards > 1``)
 composes with ``PartitionedPlacer`` by construction: the CP builds one with
 ``n_shards = cp_shards`` and CP shard *k* scores ``placer.shards[k]``
 directly — the exact worker partition shard *k* health-checks — so a
-placement never crosses shards on the hot path. The parent ``place()``
-round-robin entry point remains for single-domain callers
+placement never crosses shards on the hot path. When shard *k*'s partition
+is full, the CP's capacity spill (``ControlPlane._place``) probes the other
+``shards[j]`` itself, least-loaded-first with backoff (work stealing) —
+*not* through the parent entry point. The parent ``place()`` round-robin
+entry point remains for single-domain callers
 (``placement_policy="partitioned"`` with an unsharded CP).
 """
 from __future__ import annotations

@@ -23,7 +23,11 @@ Two sharding knobs exist and they are different layers:
     scale locks, autoscale loops, health monitors and endpoint-flush queues
     (core/control_plane.py). With ``cp_shards > 1`` the CP composes a
     ``PartitionedPlacer`` whose partitions align with the CP shards, so any
-    scoring policy here runs shard-locally on the hot path.
+    scoring policy here runs shard-locally on the hot path; when a shard's
+    partition is full, the spill steals capacity from the least-loaded
+    foreign shard (with backoff) rather than probing round-robin, and
+    ``Cluster(cp_rebalance_enabled=True)`` additionally migrates hot
+    functions off overloaded shards (docs/operations.md).
 
 Benchmarks keep the Knative-default policies for paper fidelity; the
 policies here are selectable via ``Cluster(lb_policy=...)`` /

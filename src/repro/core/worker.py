@@ -16,6 +16,26 @@ recycles configs released by teardowns.
 The daemon is distinct from the sandboxes: ``fail_daemon()`` stops heartbeats
 and the control API while sandboxes keep serving (paper §5.4 "worker daemon
 failure"); ``fail_node()`` additionally kills every sandbox.
+
+Mechanism → paper section map (claim ids C1..C12 as in costmodel.py):
+
+  * ``create_sandbox`` — §4 "Worker node software stack": lognormal runtime
+    boot (``containerd_create_median`` ≈ 110 ms, Fig 7's 10–100 ms band;
+    ``firecracker_create_median`` ≈ 40 ms snapshot restore, §5.2.3) behind
+    the per-node kernel-lock slice (C2: containerd's serialized net-stack /
+    iptables work caps 93 nodes at ~1750 creations/s).
+  * netns pool (``netcfg_*``) — §4 pre-created recyclable network configs:
+    pooled grab ≈ 1 ms on the boot path; an empty pool pays the full Linux
+    network-stack cost (60 ms) — the burst cliff the pool exists to hide.
+  * ``kill_sandbox`` / recycle — §4 sandbox teardown off the critical path:
+    async dismantle (``sandbox_teardown``), config back to the pool.
+  * health probes (``health_probe_period``) — §3.4 worker-local liveness:
+    the daemon probes its sandboxes and reports losses to the CP, which is
+    how sandbox state is *reconstructed* rather than trusted (Table 3).
+  * heartbeats — §3.4 failure detection (C9 load side-effect): every beat
+    also touches the owning CP shard's shared structures
+    (``cp_heartbeat_lock_hold``), degrading creation throughput at 5000
+    workers — the contention the sharded CP isolates per shard.
 """
 from __future__ import annotations
 

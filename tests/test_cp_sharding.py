@@ -1,11 +1,11 @@
 """Sharded control plane (core/control_plane.py, ``cp_shards``).
 
-Two claims are pinned here:
+Claims pinned here:
 
 1. ``cp_shards=1`` (the default) is *bit-identical* to the pre-shard control
    plane. The ``GOLD7``/``GOLD8`` constants below were recorded by running
    the exact workloads in this file against a reference tree built from the
-   pre-shard control plane (commit 16aeff4's core modules) plus this PR's
+   pre-shard control plane (commit 16aeff4's core modules) plus PR 2's
    orthogonal worker-heartbeat boot fix in cluster.py: same latency
    percentiles to the last float bit, same creation/teardown counts, and —
    the strongest pin — the same total number of simulator events, i.e. the
@@ -13,15 +13,29 @@ Two claims are pinned here:
    totals differ, by the few boot-window heartbeat events the fix adds;
    every latency statistic is bit-identical to pure 16aeff4 too.)
 
-2. ``cp_shards>1`` partitions functions and workers across shards with
+2. With rebalancing off (the default), the function→shard *indirection
+   table* is pure routing plumbing: ``GOLD7_S4``/``GOLD8_S4`` pin
+   ``cp_shards=4`` bit-identically against goldens recorded from PR 2's
+   static ``stable_hash % N`` control plane, so the table (and the
+   work-stealing spill order, unused when capacity never forces a spill)
+   changes nothing until the rebalancer actually moves a function.
+
+3. ``cp_shards>1`` partitions functions and workers across shards with
    per-shard scale locks and health monitors, keeps placement shard-local
    until capacity forces a spill, survives concurrent multi-worker failure
    in different shards, and rebuilds every shard on leader failover.
+
+4. Load-adaptive sharding (``cp_rebalance_enabled``): a hot shard sheds its
+   hottest functions to the coldest shard through the quiesce→move→publish
+   handoff (pending endpoint-flush entries travel with the function), the
+   persisted ``shardmap/`` overrides survive leader failover, a deposed
+   leader's in-flight handoff aborts without touching shared state, and the
+   capacity spill steals from the least-loaded victim with backoff.
 """
 import numpy as np
 import pytest
 
-from repro.core import Cluster, Function, ScalingConfig
+from repro.core import Cluster, Function, Sandbox, ScalingConfig
 from repro.simcore import Environment, stable_hash
 
 COLD_SCALING = dict(stable_window=1.0, panic_window=1.0,
@@ -39,6 +53,17 @@ GOLD7 = {"done": 240, "total": 240, "creations": 240, "teardowns": 240,
 GOLD8 = {"done": 400, "total": 400, "creations": 8,
          "p50": 0.0015260204436948754, "p99": 0.002034961221146396,
          "lat_sum": 0.6199089000305911, "events": 99302}
+
+# Recorded from PR 2's static-hash sharded CP at cp_shards=4 (same tree as
+# above plus the PR 2 sharding layer): pins that the indirection table +
+# work-stealing spill order are no-ops while rebalancing is off and capacity
+# never forces a spill. Re-record, don't tweak.
+GOLD7_S4 = {"done": 240, "total": 240, "creations": 240, "teardowns": 240,
+            "p50": 0.14856441964943767, "p99": 0.17284698168466597,
+            "lat_sum": 35.95150878463096, "events": 158957}
+GOLD8_S4 = {"done": 400, "total": 400, "creations": 8,
+            "p50": 0.0015260204436948754, "p99": 0.002034961221146396,
+            "lat_sum": 0.6199089000305911, "events": 99458}
 
 
 def _preload(cl, names, scaling_kw):
@@ -125,6 +150,17 @@ def test_fig7_cold_bit_identical_to_preshard_cp(kw):
                          ids=["default", "explicit-1"])
 def test_fig8_warm_bit_identical_to_preshard_cp(kw):
     assert fig8_warm_stats(**kw) == GOLD8
+
+
+def test_fig7_cold_s4_indirection_table_bit_identical_to_static_hash():
+    """cp_shards=4 with rebalancing off (default) routes through the
+    indirection table yet is bit-identical to PR 2's bare stable_hash CP —
+    including the total simulator event count."""
+    assert fig7_cold_stats(cp_shards=4) == GOLD7_S4
+
+
+def test_fig8_warm_s4_indirection_table_bit_identical_to_static_hash():
+    assert fig8_warm_stats(cp_shards=4) == GOLD8_S4
 
 
 def test_sharded_cp_same_workload_same_outcomes():
@@ -368,3 +404,213 @@ def test_scale_lock_convoy_shrinks_with_shards():
     w1, w4 = lock_wait(1), lock_wait(4)
     assert w1 > 0.0
     assert w4 < w1 / 2, f"sharding did not relieve the convoy: {w1} -> {w4}"
+
+
+# -- load-adaptive rebalancing -------------------------------------------------
+
+def names_on_shard(shard_id, n, cp_shards=4, limit=10_000):
+    """Deterministic function names that all hash to one shard."""
+    out = []
+    for i in range(limit):
+        name = f"f{i}"
+        if stable_hash(name) % cp_shards == shard_id:
+            out.append(name)
+            if len(out) == n:
+                return out
+    raise AssertionError("not enough names")
+
+
+def test_rebalance_off_table_is_pure_hash():
+    """With rebalancing off (default), the indirection table is exactly the
+    static hash partition and nothing ever migrates."""
+    env, cl = make_cluster(cp_shards=4, n_workers=16)
+    names = [f"f{i}" for i in range(12)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80))
+    invs = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    assert leader.fn_shard_table == {n: stable_hash(n) % 4 for n in names}
+    assert cl.collector.fn_migrations == 0
+    assert not cl.store.peek_prefix("shardmap/")
+
+
+def test_hot_shard_rebalances_to_cold_shards():
+    """Skewed load — every function hashes to shard 1 — makes that shard's
+    scale lock convoy; the rebalancer migrates functions out until load
+    spreads, invocations keep succeeding, and table/shards/persistence stay
+    consistent."""
+    env = Environment(seed=5)
+    cl = Cluster(env, n_workers=32, runtime="firecracker", cp_shards=4,
+                 cp_rebalance_enabled=True)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = names_on_shard(1, 30)
+    _preload(cl, names, COLD_SCALING)
+
+    def bursts(env):
+        while env.now < 12.0:
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(1.0)
+
+    env.process(bursts(env), name="bursts")
+    env.run(until=20.0)
+    assert cl.collector.fn_migrations > 0
+    assert all(not i.failed for i in cl.collector.invocations)
+    # load actually spread: shard 1 no longer owns everything
+    owned_elsewhere = [n for n in names if leader.fn_shard_table[n] != 1]
+    assert owned_elsewhere, "no function left the hot shard"
+    # table ↔ shard-map consistency: every function lives in exactly the
+    # shard its table entry points to
+    seen = {}
+    for shard in leader.shards:
+        for n in shard.functions:
+            assert n not in seen
+            seen[n] = shard.shard_id
+            assert leader.fn_shard_table[n] == shard.shard_id
+    assert set(seen) == set(names)
+    # every migrated function's override is durable and points at its shard
+    shardmap = cl.store.peek_prefix("shardmap/")
+    assert shardmap, "no shardmap overrides persisted"
+    for key, rec in shardmap.items():
+        name = key.split("/", 1)[1]
+        assert leader.fn_shard_table[name] == int(rec.decode())
+
+
+def test_migration_handoff_moves_pending_ep_flush_entries():
+    """An endpoint update queued on the source shard but not yet flushed
+    must travel with the migrating function and be broadcast exactly once."""
+    env, cl = make_cluster(cp_shards=4, n_workers=8)
+    leader = cl.control_plane_leader()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    src = leader._fn_shard("f")
+    dst = leader.shards[(src.shard_id + 1) % 4]
+    sb = Sandbox(sandbox_id=901, function_name="f", ip=(10, 0, 0, 1),
+                 port=80, worker_id=src.shard_id)
+    # queue the update and migrate in the same event-loop turn: the handoff
+    # (an in-memory hop) wins the race against the batched flush (a gRPC)
+    leader._queue_endpoint_update("add", "f", sb)
+    assert any(u[1] == "f" for u in src.ep_updates)
+    ev = env.process(leader._migrate_functions(src, dst, ["f"]),
+                     name="migrate")
+    env.run_until_event(ev)
+    assert "f" in dst.functions and "f" not in src.functions
+    assert leader.fn_shard_table["f"] == dst.shard_id
+    assert not any(u[1] == "f" for u in src.ep_updates)
+    env.run(until=env.now + 1.0)
+    assert cl.collector.fn_migrations == 1
+    for dp in cl.data_planes:
+        eps = dp.tables["f"].endpoints
+        assert list(eps) == [901], f"dp{dp.dp_id} saw {list(eps)}"
+
+
+def test_failover_rebuilds_indirection_table():
+    """A new leader must rebuild the indirection table from the persisted
+    shardmap overrides — not just re-derive the hash — or a failover would
+    silently undo every migration."""
+    env, cl = make_cluster(cp_shards=4, n_workers=16,
+                           cp_rebalance_enabled=True)
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(6)]
+    for n in names:
+        cl.register_sync(Function(name=n, image_url="i", port=80))
+    invs = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    # deterministically migrate one function to a foreign shard
+    victim = names[0]
+    src = leader._fn_shard(victim)
+    dst = leader.shards[(src.shard_id + 2) % 4]
+    ev = env.process(leader._migrate_functions(src, dst, [victim]),
+                     name="migrate")
+    env.run_until_event(ev)
+    env.run(until=env.now + 1.0)
+    assert leader.fn_shard_table[victim] == dst.shard_id
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 3.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not leader
+    assert new_leader.fn_shard_table[victim] == dst.shard_id
+    assert victim in new_leader.shards[dst.shard_id].functions
+    assert victim not in new_leader.shards[src.shard_id].functions
+    late = [cl.invoke(n, exec_time=0.01) for n in names]
+    env.run(until=env.now + 5.0)
+    assert all(not i.failed for i in late)
+
+
+def test_deposed_leader_migration_aborts():
+    """A migration handoff in flight when the leader is deposed must not
+    mutate the table, the shards, or the persistent store."""
+    env, cl = make_cluster(cp_shards=4, n_workers=8, n_control_planes=1,
+                           cp_rebalance_enabled=True)
+    leader = cl.control_plane_leader()
+    cl.register_sync(Function(name="f", image_url="i", port=80))
+    src = leader._fn_shard("f")
+    dst = leader.shards[(src.shard_id + 1) % 4]
+    table_before = dict(leader.fn_shard_table)
+    env.process(leader._migrate_functions(src, dst, ["f"]), name="migrate")
+    leader.stop()
+    env.run(until=env.now + 2.0)
+    assert cl.collector.fn_migrations == 0
+    assert leader.fn_shard_table == table_before
+    assert "f" not in dst.functions
+    assert not cl.store.peek_prefix("shardmap/")
+
+
+# -- work-stealing capacity spill ---------------------------------------------
+
+def test_spill_steals_from_least_loaded_shard():
+    """The capacity spill probes the least-loaded foreign shard first (by
+    the shard load signal), not the next shard in round-robin order."""
+    env, cl = make_cluster(cp_shards=4, n_workers=8)   # 2 workers per shard
+    leader = cl.control_plane_leader()
+    # a sandbox fills a whole worker: the owning shard fits exactly 2
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=300, scale_to_zero_grace=300,
+                              cpu_req_millis=10_000, mem_req_mb=1024)))
+    k = leader._fn_shard_id("f")
+    # round-robin would pick shard k+1 first; load says k+2 is the coldest
+    # (load_ema is the smoothed lock-wait signal the health loops maintain)
+    leader.shards[(k + 1) % 4].load_ema = 1.0
+    leader.shards[(k + 2) % 4].load_ema = 0.001
+    leader.shards[(k + 3) % 4].load_ema = 0.5
+    invs = [cl.invoke("f", exec_time=30.0) for _ in range(3)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    wids = sorted(sb.worker_id % 4
+                  for sb in leader.functions["f"].sandboxes.values())
+    assert wids.count(k) == 2, f"own shard not filled first: {wids}"
+    stolen = [w for w in wids if w != k]
+    assert stolen == [(k + 2) % 4], \
+        f"stole from {stolen}, expected least-loaded {(k + 2) % 4}"
+    assert cl.collector.steals == 1
+    assert cl.collector.steal_probes >= 1
+
+
+def test_failed_probe_backs_off_victim_shard():
+    """A probe that finds a victim shard full marks it with a steal backoff
+    so subsequent spills demote it, and the spill still finds capacity
+    wherever it exists (correctness unaffected by backoff)."""
+    env, cl = make_cluster(cp_shards=4, n_workers=4)   # 1 worker per shard
+    leader = cl.control_plane_leader()
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=300, scale_to_zero_grace=300,
+                              cpu_req_millis=10_000, mem_req_mb=1024)))
+    # more demand than the whole cluster fits: probes must exhaust and
+    # back off every foreign shard, yet all 4 workers end up used
+    invs = [cl.invoke("f", exec_time=30.0) for _ in range(6)]
+    env.run(until=10.0)
+    k = leader._fn_shard_id("f")
+    used = {sb.worker_id % 4
+            for sb in leader.functions["f"].sandboxes.values()}
+    assert used == {0, 1, 2, 3}
+    backed_off = [s.shard_id for s in leader.shards
+                  if s.steal_backoff_until > 0.0]
+    assert backed_off, "no failed probe ever recorded a backoff"
+    assert k not in backed_off            # own shard is never a steal victim
+    assert cl.collector.steals == 3
+    assert cl.collector.steal_probes > cl.collector.steals

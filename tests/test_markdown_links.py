@@ -1,0 +1,115 @@
+"""Docs-toolchain unit tests: tools/check_markdown_links.py.
+
+The checker is CI's gate for the operator/architecture docs, so its two
+validations — relative file targets exist, ``#fragment`` anchors resolve to
+real headings (GitHub slug rules) — are pinned here, plus the slugger's
+corner cases (code spans, punctuation, duplicate headings).
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(ROOT, "tools", "check_markdown_links.py")
+
+spec = importlib.util.spec_from_file_location("check_markdown_links", TOOL)
+cml = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(cml)
+
+
+# -- slugger ------------------------------------------------------------------
+
+@pytest.mark.parametrize("heading,slug", [
+    ("Quickstart", "quickstart"),
+    ("Sharded control plane", "sharded-control-plane"),
+    ("Reading `lock_wait_s` / load gauges", "reading-lock_wait_s--load-gauges"),
+    ("When to enable rebalancing?", "when-to-enable-rebalancing"),
+    ("`BENCH_churn.json`", "bench_churnjson"),
+    ("**Bold** and _em_", "bold-and-em"),
+    ("C1/C9 (hot shard)", "c1c9-hot-shard"),
+])
+def test_slugify(heading, slug):
+    assert cml.slugify(heading) == slug
+
+
+def test_duplicate_headings_get_suffixes():
+    text = "# Setup\n\n## Setup\n\ntext\n\n## Setup\n"
+    assert cml.anchors_of(text) == {"setup", "setup-1", "setup-2"}
+
+
+def test_headings_inside_code_fences_are_not_anchors():
+    text = "# Real\n```bash\n# not a heading\n```\n"
+    assert cml.anchors_of(cml._strip_code_fences(text)) == {"real"}
+
+
+# -- file + anchor checking ---------------------------------------------------
+
+def write(tmp_path, name, content):
+    p = tmp_path / name
+    p.write_text(content, encoding="utf-8")
+    return str(p)
+
+
+def test_valid_links_and_anchors_pass(tmp_path):
+    write(tmp_path, "other.md", "# Target Section\n\nbody\n")
+    doc = write(tmp_path, "doc.md", (
+        "# Title\n\n## Sub Section\n\n"
+        "[in-page](#sub-section) "
+        "[file](other.md) "
+        "[cross](other.md#target-section) "
+        "[web](https://example.com/x#frag)\n"
+    ))
+    assert cml.check_file(doc) == []
+
+
+def test_missing_file_reported(tmp_path):
+    doc = write(tmp_path, "doc.md", "[gone](nope.md)\n")
+    [(path, line, target, reason)] = cml.check_file(doc)
+    assert (line, target, reason) == (1, "nope.md", "missing file")
+
+
+def test_dangling_in_page_anchor_reported(tmp_path):
+    doc = write(tmp_path, "doc.md", "# Only\n\n[bad](#nope)\n")
+    [(path, line, target, reason)] = cml.check_file(doc)
+    assert (line, target, reason) == (3, "#nope", "dangling anchor")
+
+
+def test_dangling_cross_file_anchor_reported(tmp_path):
+    write(tmp_path, "other.md", "# Present\n")
+    doc = write(tmp_path, "doc.md", "[bad](other.md#absent)\n")
+    [(path, line, target, reason)] = cml.check_file(doc)
+    assert (target, reason) == ("other.md#absent", "dangling anchor")
+
+
+def test_anchor_into_non_markdown_is_ignored(tmp_path):
+    write(tmp_path, "data.json", "{}")
+    doc = write(tmp_path, "doc.md", "[data](data.json#row-3)\n")
+    assert cml.check_file(doc) == []
+
+
+def test_links_inside_code_fences_are_ignored(tmp_path):
+    doc = write(tmp_path, "doc.md",
+                "# T\n```md\n[broken](missing.md)\n```\n")
+    assert cml.check_file(doc) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    good = write(tmp_path, "good.md", "# A\n[ok](#a)\n")
+    bad = write(tmp_path, "bad.md", "[x](#zzz)\n")
+    r = subprocess.run([sys.executable, TOOL, good], capture_output=True)
+    assert r.returncode == 0, r.stdout
+    r = subprocess.run([sys.executable, TOOL, bad], capture_output=True)
+    assert r.returncode == 1
+    assert b"dangling anchor" in r.stdout
+
+
+def test_repo_docs_have_no_broken_links_or_anchors():
+    """The in-repo docs are themselves the checker's fixture: CI runs this
+    same sweep, so keep it green locally too."""
+    targets = ["README.md", "ROADMAP.md", "CHANGES.md", "docs"]
+    r = subprocess.run([sys.executable, TOOL] + targets,
+                       capture_output=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout.decode()

@@ -1,10 +1,18 @@
 #!/usr/bin/env python
-"""Offline markdown link checker (no deps, no network).
+"""Offline markdown link + anchor checker (no deps, no network).
 
 Walks the given files/directories for ``*.md``, extracts inline links and
-images ``[text](target)``, and verifies that every *relative* target exists
-on disk (anchors are stripped; ``http(s)``/``mailto`` targets are skipped —
-CI has no network guarantee). Exits non-zero listing every broken link.
+images ``[text](target)``, and verifies that
+
+  * every *relative* file target exists on disk, and
+  * every ``#fragment`` — in-page (``#section``) or cross-file
+    (``other.md#section``) — names a real heading anchor in the target
+    markdown file, using GitHub's heading→anchor slug rules (lowercase,
+    punctuation stripped, spaces→hyphens, ``-1``/``-2``… suffixes for
+    duplicate headings).
+
+``http(s)``/``mailto`` targets are skipped — CI has no network guarantee.
+Exits non-zero listing every broken link or dangling anchor.
 
 Usage:  python tools/check_markdown_links.py README.md docs CHANGES.md
 """
@@ -18,6 +26,9 @@ import sys
 # skips reference-style and autolinks, which this repo doesn't use
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+(?:\([^()]*\)[^()\s]*)*)\)")
 SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+# explicit HTML anchors (<a name="..."> / <a id="...">) also count
+HTML_ANCHOR_RE = re.compile(r"<a\s+(?:name|id)=[\"']([^\"']+)[\"']")
 
 
 def md_files(paths):
@@ -34,26 +45,99 @@ def md_files(paths):
                   file=sys.stderr)
 
 
-def check_file(path: str) -> list:
+def _strip_code_fences(text: str) -> str:
+    """Blank out fenced code blocks (their bracket/paren/heading-looking
+    text is neither a link nor a heading), preserving newlines so reported
+    line numbers stay correct."""
+    return re.sub(r"```.*?```",
+                  lambda m: "\n" * m.group(0).count("\n"), text, flags=re.S)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's heading→anchor slug: strip markdown inline syntax, lowercase,
+    drop everything but word chars/spaces/hyphens, spaces→hyphens."""
+    s = heading.strip()
+    s = re.sub(r"`([^`]*)`", r"\1", s)                 # code spans
+    s = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", s)     # links -> text
+    s = re.sub(r"\*{1,3}([^*]+)\*{1,3}", r"\1", s)     # *emphasis*
+    # _emphasis_ only at word boundaries: intra-word underscores
+    # (snake_case identifiers) are literal on GitHub
+    s = re.sub(r"(?<!\w)_{1,3}([^_]+)_{1,3}(?!\w)", r"\1", s)
+    s = s.lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    s = s.replace(" ", "-")
+    return s
+
+
+def anchors_of(text: str) -> set:
+    """All valid anchor targets in a markdown document (already fence-
+    stripped): heading slugs with GitHub duplicate suffixes, plus explicit
+    HTML anchors."""
+    out: set = set()
+    counts: dict = {}
+    for line in text.splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    out.update(HTML_ANCHOR_RE.findall(text))
+    return out
+
+
+class AnchorCache:
+    """Per-file anchor sets, loaded lazily (a cross-file fragment check
+    reads the target file once, whether or not it was on the CLI)."""
+
+    def __init__(self):
+        self._by_path: dict = {}
+
+    def seed(self, path: str, stripped_text: str) -> None:
+        """Record anchors for an already-read, fence-stripped document so a
+        checked file is never re-read just to resolve its own anchors."""
+        self._by_path.setdefault(os.path.normpath(path),
+                                 anchors_of(stripped_text))
+
+    def get(self, path: str) -> set:
+        key = os.path.normpath(path)
+        if key not in self._by_path:
+            try:
+                with open(key, encoding="utf-8") as fh:
+                    text = _strip_code_fences(fh.read())
+            except OSError:
+                text = ""
+            self._by_path[key] = anchors_of(text)
+        return self._by_path[key]
+
+
+def check_file(path: str, cache: AnchorCache = None) -> list:
+    """Returns [(path, line, target, reason), ...] for every broken link."""
+    cache = cache or AnchorCache()
     broken = []
     with open(path, encoding="utf-8") as fh:
-        text = fh.read()
-    # blank out fenced code blocks (their bracket/paren text is not a link)
-    # preserving newlines so reported line numbers stay correct
-    text = re.sub(r"```.*?```",
-                  lambda m: "\n" * m.group(0).count("\n"), text, flags=re.S)
+        text = _strip_code_fences(fh.read())
+    cache.seed(path, text)
     base = os.path.dirname(path)
     for m in LINK_RE.finditer(text):
         target = m.group(1)
         if target.startswith(SKIP_SCHEMES):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:                      # pure in-page anchor
-            continue
-        resolved = os.path.normpath(os.path.join(base, rel))
-        if not os.path.exists(resolved):
-            line = text[:m.start()].count("\n") + 1
-            broken.append((path, line, target))
+        line = text[:m.start()].count("\n") + 1
+        rel, _, frag = target.partition("#")
+        if rel:
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                broken.append((path, line, target, "missing file"))
+                continue
+        else:
+            resolved = path                    # pure in-page anchor
+        if frag:
+            if not resolved.endswith(".md"):
+                continue                       # anchors into non-markdown
+            if frag not in cache.get(resolved):
+                broken.append((path, line, target, "dangling anchor"))
     return broken
 
 
@@ -63,11 +147,12 @@ def main(argv) -> int:
     if not files:
         print("no markdown files found", file=sys.stderr)
         return 1
+    cache = AnchorCache()
     broken = []
     for f in files:
-        broken.extend(check_file(f))
-    for path, line, target in broken:
-        print(f"{path}:{line}: broken link -> {target}")
+        broken.extend(check_file(f, cache))
+    for path, line, target, reason in broken:
+        print(f"{path}:{line}: {reason} -> {target}")
     print(f"checked {len(files)} files, {len(broken)} broken links")
     return 1 if broken else 0
 
