@@ -26,15 +26,27 @@ arrives as periodic cold bursts, so sandbox-creation load concentrates on
 the shards that own the popular functions. The static ``stable_hash % N``
 partition convoys on the hot shard; the sweep records shards 1→8 with the
 load-adaptive rebalancer + work-stealing spill off vs on
-(``cp_rebalance_enabled``, core/control_plane.py).
+(``cp_rebalance_enabled``, core/control_plane.py),
 
-Emits ``BENCH_churn.json`` (schema in docs/benchmarks.md). ``--smoke`` runs
-a seconds-scale subset (CI).
+plus a live-mode smoke cell (``--live-smoke`` runs it alone): the same churn
+shape against workers whose ``create_hook`` builds a *real* replica payload,
+so wall-clock creation throughput covers actual sandbox construction work,
+not only DES bookkeeping (ROADMAP "live-mode churn bench").
+
+Emits ``BENCH_churn.json`` (schema in docs/benchmarks.md): results, a
+``meta.provenance`` block (git SHA, python/numpy/jax versions, CPU count,
+timestamp) so wall-clock numbers are comparable across PRs, and a
+``perf_trajectory`` list (preserved across re-runs) holding before/after
+wall-clock records of deliberate perf changes. ``--smoke`` runs a
+seconds-scale subset (CI).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
+import subprocess
 import time
 
 import numpy as np
@@ -54,6 +66,32 @@ from repro.core.placement import Placer, make_placer
 from repro.simcore import Environment
 
 REQ_CPU, REQ_MEM = 100, 128         # SWEEP_SCALING request footprint
+
+
+def bench_provenance() -> dict:
+    """Run provenance for ``meta``: enough to judge whether two recorded
+    wall-clock numbers are comparable (same tree? same machine class?)."""
+    prov = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+    }
+    try:
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        prov["git_sha"] = None
+    try:
+        import jax
+        prov["jax"] = jax.__version__
+    except Exception:                 # noqa: BLE001 — jax is optional here
+        prov["jax"] = None
+    return prov
 
 
 def placer_microbench(n_nodes: int, n_ops: int, use_index: bool,
@@ -205,11 +243,100 @@ def skew_point(n_workers: int, rate: float, duration: float,
     }
 
 
+def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
+                     rate: float = 50.0, duration: float = 2.0,
+                     seed: int = 7, replica_dim: int = 96) -> dict:
+    """Live-mode churn smoke: a small workers×rate cell where every sandbox
+    creation runs a *real* ``create_hook`` (allocate + warm a small replica —
+    matmul standing in for snapshot-restore/model-load work), so wall-clock
+    creation throughput includes genuine payload construction next to the
+    DES numbers (ROADMAP "live-mode churn bench"). Teardown of a live
+    sandbox drops its replica, so churn exercises build *and* reclaim."""
+    env = Environment(seed=seed)
+    replicas: dict = {}
+    hook_wall = [0.0]
+
+    def create_replica(sandbox):
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(sandbox.sandbox_id)
+        w = rng.standard_normal((replica_dim, replica_dim))
+        w = w @ w.T                    # "warm-up" compute, like a real restore
+        replicas[sandbox.sandbox_id] = w
+        hook_wall[0] += time.perf_counter() - t0
+
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
+                       create_hook=create_replica)
+    plan = [(i / rate, f"lf{i % n_functions}", 0.02)
+            for i in range(int(rate * duration))]
+    preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
+    ev0, t0 = env.events_processed, time.perf_counter()
+    invs = run_open_loop(env, cl, plan, until_extra=10.0)
+    wall = time.perf_counter() - t0
+    # reclaim: replicas of sandboxes the autoscaler tore down are dropped
+    live_ids = {sid for w in cl.workers.values() for sid in w.sandboxes}
+    for sid in [s for s in replicas if s not in live_ids]:
+        del replicas[sid]
+    stats = latency_stats(invs, "e2e_latency")
+    creations = cl.collector.sandbox_creations
+    return {
+        "workers": n_workers, "rate": rate, "duration": duration,
+        "n_functions": n_functions, "replica_dim": replica_dim,
+        "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
+        "events": env.events_processed - ev0,
+        "creations": creations,
+        "creations_per_wall_s": round(creations / wall, 1),
+        "create_hook_wall_s": round(hook_wall[0], 4),
+        "create_hook_ms_mean": round(1e3 * hook_wall[0] / max(creations, 1), 3),
+        "live_replicas": len(replicas),
+        "done": stats["done"], "total": stats["total"],
+        "p50_ms": round(stats["p50"] * 1e3, 3),
+        "p99_ms": round(stats["p99"] * 1e3, 3),
+    }
+
+
+def _print_live_smoke(cell: dict) -> None:
+    print(f"live-smoke workers={cell['workers']} rate={cell['rate']:.0f}: "
+          f"{cell['creations_per_wall_s']:.0f} creations/s wall "
+          f"(hook {cell['create_hook_ms_mean']:.2f} ms/creation), "
+          f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
+          f"done={cell['done']}/{cell['total']}", flush=True)
+
+
+def run_live_smoke(out: str = "BENCH_churn.json") -> dict:
+    """``--live-smoke``: run only the live-mode cell and merge it into the
+    existing out-file (preserving the recorded sweeps)."""
+    cell = live_smoke_point()
+    _print_live_smoke(cell)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    # this cell's provenance rides inside the cell: the file-level
+    # meta.provenance keeps describing the run that produced the sweeps
+    cell["provenance"] = bench_provenance()
+    result["live_smoke"] = cell
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return cell
+
+
 def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
     with open(out, "a"):               # fail on an unwritable path up front,
         pass                           # not after minutes of sweep
-    result = {"meta": {"bench": "churn_scale", "smoke": smoke},
+    # perf_trajectory records deliberate before/after perf work; it must
+    # survive re-runs of the sweep
+    try:
+        with open(out) as fh:
+            trajectory = json.load(fh).get("perf_trajectory", [])
+    except (OSError, ValueError):
+        trajectory = []
+    result = {"meta": {"bench": "churn_scale", "smoke": smoke,
+                       "provenance": bench_provenance()},
               "placer_microbench": [], "grid": []}
+    if trajectory:
+        result["perf_trajectory"] = trajectory
 
     # -- placer microbench: incremental index vs seed brute-force rescan ----
     micro_nodes = 1000 if smoke else 5000
@@ -295,6 +422,10 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
               f"mean={cell['mean_ms']:.1f}ms "
               f"done={cell['done']}/{cell['total']}", flush=True)
 
+    # -- live-mode smoke (real create_hook payloads; ROADMAP item) ----------
+    result["live_smoke"] = cell = live_smoke_point()
+    _print_live_smoke(cell)
+
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -340,6 +471,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale subset for CI")
+    ap.add_argument("--live-smoke", action="store_true",
+                    help="run only the live-mode (create_hook) churn cell "
+                         "and merge it into --out")
     ap.add_argument("--out", default="BENCH_churn.json")
     args = ap.parse_args()
-    run_bench(smoke=args.smoke, out=args.out)
+    if args.live_smoke:
+        run_live_smoke(out=args.out)
+    else:
+        run_bench(smoke=args.smoke, out=args.out)

@@ -33,37 +33,48 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Tuple
+from typing import Deque
 
 from repro.core.abstractions import ScalingConfig
 
 
 @dataclass
 class ConcurrencyWindow:
-    """Time-bucketed average of a concurrency signal."""
+    """Time-bucketed average of a concurrency signal.
+
+    Times and values live in parallel deques (not one deque of tuples) so
+    ``average`` is a C-speed ``sum`` over plain floats — same addition order,
+    bit-identical result, no per-sample generator frame. A cold burst parks
+    thousands of samples in the window and re-averages on every urgent
+    reconcile; this sum was one of the hottest loops in the churn benchmark."""
 
     horizon: float
-    samples: Deque[Tuple[float, float]] = field(default_factory=deque)
+    times: Deque[float] = field(default_factory=deque)
+    values: Deque[float] = field(default_factory=deque)
 
     def record(self, t: float, value: float) -> None:
-        self.samples.append((t, value))
+        self.times.append(t)
+        self.values.append(value)
         self._evict(t)
 
     def _evict(self, t: float) -> None:
-        while self.samples and self.samples[0][0] < t - self.horizon:
-            self.samples.popleft()
+        times, values = self.times, self.values
+        cut = t - self.horizon
+        while times and times[0] < cut:
+            times.popleft()
+            values.popleft()
 
     def average(self, t: float) -> float:
         self._evict(t)
-        if not self.samples:
+        if not self.values:
             return 0.0
-        return sum(v for _, v in self.samples) / len(self.samples)
+        return sum(self.values) / len(self.values)
 
     def max(self, t: float) -> float:
         self._evict(t)
-        if not self.samples:
+        if not self.values:
             return 0.0
-        return max(v for _, v in self.samples)
+        return max(self.values)
 
 
 class FunctionAutoscalerState:

@@ -32,6 +32,7 @@ guidance for all of these lives in docs/operations.md.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from typing import Callable, Dict, Generator, List, Optional
 
@@ -44,7 +45,30 @@ from repro.core.metrics import Collector
 from repro.core.persistence import SimStore
 from repro.core.request import Invocation, InvocationMode
 from repro.core.worker import WorkerDaemon
-from repro.simcore import Environment, Event, stable_hash
+from repro.simcore import Environment, Event, Interrupt, stable_hash
+
+
+class _HeartbeatWheel:
+    """Per-CP-shard worker-heartbeat aggregator.
+
+    The paper's C9 load side-effect (every worker beat touches the owning CP
+    shard's shared structures) used to be modeled with one generator process
+    per worker, each beat spawning a sub-process to acquire the shard lock —
+    ~5 heap events per beat, O(n_workers) event tax at 5000 workers. The
+    wheel replaces all of a shard's per-worker processes with one process and
+    a deadline heap: each worker's beat instants are *identical* (same
+    ``hb-{wid}`` RNG phase draw, same accumulated ``+= period`` float chain),
+    beats due at the same instant run in worker-id order, and the lock touch
+    itself goes through ``Resource.reserve`` — zero events unless a creation
+    actually collides with the beat (see control_plane.heartbeat).
+    """
+
+    __slots__ = ("heap", "proc", "sleep_until")
+
+    def __init__(self):
+        self.heap: List[tuple] = []     # (beat deadline, wid)
+        self.proc = None                # the wheel's driver Process
+        self.sleep_until: Optional[float] = None
 
 
 class Cluster:
@@ -104,7 +128,10 @@ class Cluster:
                                      enable_hb_sim=enable_ha_sim)
         self.enable_ha_sim = enable_ha_sim
         self._inv_ids = itertools.count(1)
-        self._worker_hb_procs = {}
+        # one heartbeat wheel per CP shard (the same wid % cp_shards
+        # partition the CP health monitors use)
+        self._cp_shards = max(1, cp_shards)
+        self._hb_wheels = [_HeartbeatWheel() for _ in range(self._cp_shards)]
         self._started = False
         # front-end LB rotation: dead DPs keep receiving traffic until the
         # keepalived health check removes them (paper §5.4 DP failover)
@@ -151,25 +178,57 @@ class Cluster:
                 # later registrations' persistence writes were still draining
                 # (boot is O(n_workers) fsyncs of sim time), silently evicting
                 # ~a quarter of a 1000-worker fleet before first beat.
-                self._worker_hb_procs[wid] = self.env.process(
-                    self._worker_heartbeat(wid), name=f"hb-{wid}")
+                self._hb_wheel_add(wid)
             done.succeed(None)
 
         self.env.process(boot(self.env), name="cluster-boot")
         self.env.run_until_event(done)
 
-    def _worker_heartbeat(self, wid: int) -> Generator:
+    # -- heartbeat wheel ------------------------------------------------------
+    def _hb_wheel_add(self, wid: int) -> None:
+        """Enroll a worker in its shard's heartbeat wheel, beating from now.
+
+        The first beat lands at ``(now + phase) + period`` — the same float
+        arithmetic, in the same order, as the retired per-worker generator
+        (process start, ``timeout(phase)``, then ``timeout(period)`` per
+        beat), with the phase drawn from the same ``hb-{wid}`` stream, so
+        every beat instant is bit-identical to the per-process model."""
         c = self.costs
-        rng = self.env.rng(f"hb-{wid}")
-        yield self.env.timeout(rng.uniform(0, c.worker_heartbeat_period))
+        phase = self.env.rng(f"hb-{wid}").uniform(0, c.worker_heartbeat_period)
+        first = (self.env.now + phase) + c.worker_heartbeat_period
+        wheel = self._hb_wheels[wid % self._cp_shards]
+        heapq.heappush(wheel.heap, (first, wid))
+        if wheel.proc is None or not wheel.proc.is_alive:
+            wheel.proc = self.env.process(
+                self._hb_wheel_run(wheel),
+                name=f"hb-wheel-{wid % self._cp_shards}")
+        elif wheel.sleep_until is not None and first < wheel.sleep_until:
+            # the wheel is parked past the new worker's first beat: preempt
+            wheel.proc.interrupt("earlier-deadline")
+
+    def _hb_wheel_run(self, wheel: _HeartbeatWheel) -> Generator:
+        env, heap = self.env, wheel.heap
+        period = self.costs.worker_heartbeat_period
         while True:
-            yield self.env.timeout(c.worker_heartbeat_period)
-            w = self.workers.get(wid)
-            if w is None or not w.daemon_alive:
-                continue
-            cp = self.control_plane_leader()
-            if cp is not None:
-                cp.heartbeat(wid)
+            while heap and heap[0][0] <= env.now:
+                # due beats run in (deadline, worker-id) order — bit-identical
+                # instants, deterministic tie order
+                t, wid = heapq.heappop(heap)
+                w = self.workers.get(wid)
+                if w is not None and w.daemon_alive:
+                    cp = self.control_plane_leader()
+                    if cp is not None:
+                        cp.heartbeat(wid)
+                # next beat continues this worker's own float-add chain
+                heapq.heappush(heap, (t + period, wid))
+            wheel.sleep_until = heap[0][0]
+            try:
+                # absolute-deadline sleep: the beat must run at the heap
+                # instant bit-exactly (now + (t - now) != t in float)
+                yield env.timeout_at(wheel.sleep_until)
+            except Interrupt:
+                pass        # a newly added worker beats earlier: re-aim
+            wheel.sleep_until = None
 
     # -- user API -------------------------------------------------------------------
     def register(self, fn: Function) -> Event:

@@ -44,12 +44,19 @@ from typing import Dict, Optional
 
 def lb_least_loaded(endpoints: Dict[int, object], fn: str,
                     exclude: Optional[int] = None) -> Optional[object]:
+    # direct attribute reads, not the Endpoint.free property: this scan runs
+    # once per dispatch over every endpoint of the function and dominated
+    # burst-drain wall time; selection (first-seen wins ties, same iteration
+    # order) is unchanged
     best = None
+    best_in_use = -1
     for sid, ep in endpoints.items():
-        if sid == exclude:
+        if sid == exclude or ep.draining:
             continue
-        if ep.free > 0 and (best is None or ep.in_use < best.in_use):
+        in_use = ep.in_use
+        if in_use < ep.capacity and (best is None or in_use < best_in_use):
             best = ep
+            best_in_use = in_use
     return best
 
 

@@ -13,6 +13,16 @@ Each node keeps a pool of pre-created recyclable network configurations
 Linux network-stack cost when the pool is empty; a background process
 recycles configs released by teardowns.
 
+The pool replenisher is *demand-driven and grid-aligned*: instead of a
+per-node poll every ``netcfg_replenish_period`` (which at 5000 nodes is
+~97% of all simulator events while doing nothing), a refill callback is
+scheduled only while the pool is below target, at exactly the instants the
+polling loop would have refilled — the tick grid is advanced by the same
+repeated float addition the polling loop's ``timeout(period)`` chain
+performed, so refill times (and every downstream latency statistic) are
+bit-identical while the idle ticks vanish (tests/test_simcore.py pins the
+equivalence against a reference polling loop).
+
 The daemon is distinct from the sandboxes: ``fail_daemon()`` stops heartbeats
 and the control API while sandboxes keep serving (paper §5.4 "worker daemon
 failure"); ``fail_node()`` additionally kills every sandbox.
@@ -72,21 +82,50 @@ class WorkerDaemon:
         self.create_hook = create_hook  # live-mode: build the real replica
         self._kernel_lock = env.resource(capacity=1)
         self._netcfg_pool = env.store()
-        self._netcfg_outstanding = costs.netcfg_pool_size
         for _ in range(costs.netcfg_pool_size):
             self._netcfg_pool.put(object())
         self._rng = env.rng(f"worker-{info.worker_id}")
         self.creations = 0
         self.slow_factor = 1.0     # straggler injection (tests/benchmarks)
-        env.process(self._netcfg_replenisher(), name=f"netcfg-{info.worker_id}")
+        # demand-driven replenisher state: the tick-grid accumulator starts
+        # where the old polling process started (daemon construction time)
+        # and only ever advances by += period — the identical float-add chain
+        # the polling loop's timeout(period) produced, so refill instants
+        # match it bit for bit
+        self._netcfg_next_tick = env.now
+        self._netcfg_refill_pending = False
 
-    def _netcfg_replenisher(self) -> Generator:
-        """Background pre-creation keeps the recyclable config pool topped up
-        (paper §4: pools of pre-created network configurations)."""
-        while True:
-            yield self.env.timeout(self.costs.netcfg_replenish_period)
-            if self.node_alive and len(self._netcfg_pool) < self.costs.netcfg_pool_size:
-                self._netcfg_pool.put(object())
+    def _arm_netcfg_refill(self) -> None:
+        """Schedule the next pool refill, iff the pool is below target and no
+        refill is already pending (paper §4: pools of pre-created network
+        configurations). Costs one heap event per actual refill; a full pool
+        costs nothing — the polling loop this replaces burned one event per
+        node per 25 ms forever."""
+        if self._netcfg_refill_pending or not self.node_alive:
+            return
+        if len(self._netcfg_pool) >= self.costs.netcfg_pool_size:
+            return
+        t = self._netcfg_next_tick
+        period = self.costs.netcfg_replenish_period
+        now = self.env.now
+        while t <= now:                  # next grid instant strictly > now
+            t += period
+        self._netcfg_next_tick = t
+        self._netcfg_refill_pending = True
+        self.env.schedule_at(t, self._netcfg_refill_fire)
+
+    def _netcfg_refill_fire(self) -> None:
+        self._netcfg_refill_pending = False
+        if not self.node_alive:
+            return
+        pool, size = self._netcfg_pool, self.costs.netcfg_pool_size
+        if len(pool) < size:
+            pool.put(object())
+            if len(pool) < size:         # still short: keep walking the grid
+                t = self._netcfg_next_tick + self.costs.netcfg_replenish_period
+                self._netcfg_next_tick = t
+                self._netcfg_refill_pending = True
+                self.env.schedule_at(t, self._netcfg_refill_fire)
 
     # -- sandbox lifecycle --------------------------------------------------
     def create_sandbox(self, sandbox: Sandbox) -> Generator:
@@ -98,10 +137,15 @@ class WorkerDaemon:
         self.sandboxes[sandbox.sandbox_id] = rt
 
         # 1) network configuration: pooled fast path vs full net-stack cost.
+        # Taking a config is the demand signal that arms the (grid-aligned)
+        # refill timer; an empty pool is demand too — the polling loop would
+        # have refilled at the next tick either way.
         if len(self._netcfg_pool):
-            yield self._netcfg_pool.get()
+            self._netcfg_pool.items.popleft()
+            self._arm_netcfg_refill()
             yield self.env.timeout(c.netcfg_pooled)
         else:
+            self._arm_netcfg_refill()
             yield self.env.timeout(c.netcfg_fresh)
 
         # 2) serialized kernel section (cgroups/netns/iptables updates).
@@ -142,11 +186,13 @@ class WorkerDaemon:
         if rt is None:
             return
         yield self.env.timeout(self.costs.sandbox_teardown)
-        # recycle the network config back into the pool after a delay
-        def recycle(env):
-            yield env.timeout(self.costs.netcfg_recycle)
-            self._netcfg_pool.put(object())
-        self.env.process(recycle(self.env), name="netcfg-recycle")
+        # recycle the network config back into the pool after a delay — a
+        # plain scheduled callback (one heap event), not a process
+        self.env.schedule_at(self.env.now + self.costs.netcfg_recycle,
+                             self._netcfg_recycle_fire)
+
+    def _netcfg_recycle_fire(self) -> None:
+        self._netcfg_pool.put(object())
 
     def list_sandboxes(self) -> list[Sandbox]:
         """Recovery API: CP reconstructs sandbox state from here (§3.4.1)."""

@@ -8,7 +8,24 @@ Knative/K8s cluster-manager models in virtual time. Design goals:
   * generator processes — components are written as ``def proc(env): yield
     env.timeout(x)`` coroutines, like simpy;
   * tiny surface — Timeout, Event, Store (FIFO queue), Resource (counting
-    semaphore), process interrupt/kill; nothing else is needed.
+    semaphore), process interrupt/kill; nothing else is needed;
+  * a cheap hot path — the engine itself must not be the bottleneck when a
+    5000-worker cluster model is simulated (benchmarks/churn_scale.py tracks
+    ``events_per_wall_s``). Hot-path events schedule *bound methods*, never
+    per-event lambda closures; ``Process``/``Timeout``/``AnyOf`` carry
+    ``__slots__``; and a process that is the sole waiter of a Timeout is
+    resumed directly from the timer callback without touching the generic
+    callback list (``Timeout._waiter``).
+
+Besides events, the engine offers two zero-event modeling devices used by
+the demand-driven timers in core/:
+
+  * ``Environment.schedule_at`` — run a plain callback at an absolute sim
+    time (one heap entry, no Process/Timeout objects), and
+  * ``Resource.reserve`` — a *lazy hold*: take a slot for a known interval
+    without any heap traffic unless a contender actually shows up, in which
+    case the release materializes as a real event at the exact instant the
+    modeled holder would have released (FIFO semantics preserved).
 
 The same component code can also run in "live" mode (see core/cluster.py):
 live mode never yields timeouts for modeled service times, it executes real
@@ -94,20 +111,52 @@ class Event:
 
 
 class Timeout(Event):
-    def __init__(self, env: "Environment", delay: float, value: Any = None):
+    """Fires after ``delay``. The overwhelmingly common waiter is a single
+    Process (``yield env.timeout(x)``): that case is fast-pathed through the
+    ``_waiter`` slot — the timer callback resumes the process directly,
+    skipping callback-list append/swap/iterate entirely."""
+
+    __slots__ = ("_waiter",)
+
+    def __init__(self, env: "Environment", delay: float, value: Any = None,
+                 at: Optional[float] = None):
+        """Relative by default; pass ``at`` (absolute sim time) to fire at an
+        exact precomputed instant — ``env.now + (t - env.now)`` does not
+        round-trip in floating point, so timers that must hit a deadline
+        bit-exactly (the heartbeat wheel) cannot go through a delay."""
         super().__init__(env)
-        if delay < 0:
-            raise ValueError(f"negative delay {delay}")
+        if at is None:
+            if delay < 0:
+                raise ValueError(f"negative delay {delay}")
+            at = env.now + delay
+        elif at < env.now:
+            raise ValueError(f"timeout into the past: {at} < {env.now}")
         self._value = value
-        env._schedule(env.now + delay, self._trigger_now)
+        self._waiter: Optional["Process"] = None
+        env._schedule(at, self._trigger_now)
 
     def _trigger_now(self) -> None:
         self.triggered = True
+        w = self._waiter
+        if w is not None:
+            self._waiter = None
+            if not self.callbacks:
+                # sole-waiter fast path: resume the process in-line
+                self.fired = True
+                if w._target is self:       # not interrupted/killed meanwhile
+                    w._target = None
+                    w._resume(self._value, True)
+                return
+            # callbacks were added after the sole waiter registered (rare):
+            # fall back to the generic path, waiter first (registration order)
+            self.callbacks.insert(0, w._on_target)
         self._run_callbacks()
 
 
 class Process(Event):
     """A running generator. Also an Event that triggers when it returns."""
+
+    __slots__ = ("gen", "name", "_target", "_alive")
 
     def __init__(self, env: "Environment", gen: Generator, name: str = "?"):
         super().__init__(env)
@@ -115,23 +164,33 @@ class Process(Event):
         self.name = name
         self._target: Optional[Event] = None
         self._alive = True
-        env._schedule(env.now, lambda: self._resume(None, True))
+        env._schedule(env.now, self._start)
 
     @property
     def is_alive(self) -> bool:
         return self._alive
+
+    def _start(self) -> None:
+        self._resume(None, True)
+
+    def _detach_target(self) -> None:
+        """Stop waiting on the current target (interrupt/kill)."""
+        target, self._target = self._target, None
+        if target is not None and not target.triggered:
+            if type(target) is Timeout and target._waiter is self:
+                target._waiter = None
+            else:
+                try:
+                    target.callbacks.remove(self._on_target)
+                except ValueError:
+                    pass
 
     def interrupt(self, cause: Any = None) -> None:
         """Interrupt the process (throws Interrupt at its current yield)."""
         if not self._alive:
             return
         # Detach from whatever it is waiting on, then resume with an error.
-        target, self._target = self._target, None
-        if target is not None and not target.triggered:
-            try:
-                target.callbacks.remove(self._on_target)
-            except ValueError:
-                pass
+        self._detach_target()
         self.env._schedule(self.env.now, lambda: self._throw(Interrupt(cause)))
 
     def kill(self) -> None:
@@ -139,12 +198,7 @@ class Process(Event):
         if not self._alive:
             return
         self._alive = False
-        target, self._target = self._target, None
-        if target is not None and not target.triggered:
-            try:
-                target.callbacks.remove(self._on_target)
-            except ValueError:
-                pass
+        self._detach_target()
         self.gen.close()
         if not self.triggered:
             self.succeed(None)
@@ -187,7 +241,14 @@ class Process(Event):
         self._wait_on(nxt)
 
     def _wait_on(self, evt: Any) -> None:
-        if not isinstance(evt, Event):
+        if type(evt) is Timeout:
+            # sole-waiter fast path: a fresh `yield env.timeout(x)` — by far
+            # the hottest wait in any simulation — skips the callback list
+            if evt._waiter is None and not evt.fired and not evt.callbacks:
+                self._target = evt
+                evt._waiter = self
+                return
+        elif not isinstance(evt, Event):
             raise TypeError(f"process {self.name} yielded non-event {evt!r}")
         self._target = evt
         evt.add_callback(self._on_target)
@@ -205,14 +266,34 @@ class Process(Event):
             self.fail(exc)
 
 
+def _observed(evt: "Event") -> None:
+    """Shared no-op observer left on a detached any_of loser: failures of a
+    raced-and-lost event stay *observed* (not re-raised into the event loop),
+    exactly as when the dead AnyOf closure was still attached."""
+
+
 class AnyOf(Event):
-    """Triggers when the first of ``events`` triggers; value = (index, value)."""
+    """Triggers when the first of ``events`` triggers; value = (index, value).
+
+    When the winner fires, the callbacks registered on the still-pending
+    *losers* are detached. Without that, a long-lived event that repeatedly
+    loses ``any_of`` races (e.g. a completion event raced against retry
+    timeouts in a loop) accumulates one dead closure per race for the rest of
+    its life — a genuine memory/CPU leak in long simulations. A loser left
+    with no other waiter gets the shared ``_observed`` sentinel (at most one,
+    ever), keeping the pre-detach failure semantics without the per-race
+    closure."""
+
+    __slots__ = ("_done", "_waits")
 
     def __init__(self, env: "Environment", events: list[Event]):
         super().__init__(env)
         self._done = False
+        self._waits: list[tuple[Event, Callable[[Event], None]]] = []
         for i, e in enumerate(events):
-            e.add_callback(self._make_cb(i))
+            cb = self._make_cb(i)
+            self._waits.append((e, cb))
+            e.add_callback(cb)
 
     def _make_cb(self, i: int) -> Callable[[Event], None]:
         def cb(evt: Event) -> None:
@@ -223,6 +304,19 @@ class AnyOf(Event):
         if self._done or self.triggered:
             return
         self._done = True
+        # detach loser callbacks: an event that never fires must not keep a
+        # reference to this (finished) AnyOf via its callback list. Losers
+        # already triggered will fire on their own; their callback finds
+        # ``_done`` set and is a no-op.
+        for e, cb in self._waits:
+            if not e.triggered and not e.fired:
+                try:
+                    e.callbacks.remove(cb)
+                except ValueError:
+                    pass
+                if not e.callbacks:
+                    e.callbacks.append(_observed)
+        self._waits = []
         self.succeed((i, value))
 
 
@@ -254,15 +348,58 @@ class Store:
 
 
 class Resource:
-    """Counting semaphore; models a contended resource (CPU, lock, ports)."""
+    """Counting semaphore; models a contended resource (CPU, lock, ports).
+
+    ``reserve(until)`` is a *lazy hold*: it takes a slot synchronously for a
+    known interval without scheduling anything. If nobody contends before
+    ``until``, the hold is reclaimed in-place by the next acquire/reserve —
+    zero heap events for the whole critical section. The first contender
+    *materializes* the release as a real scheduled event at exactly
+    ``until``, so queueing (who waits, until when, in what order) is
+    indistinguishable from a process that acquired, held a timeout and
+    released. This is what lets the C9 heartbeat lock touches cost no events
+    unless they actually collide with a creation (core/control_plane.py)."""
+
+    __slots__ = ("env", "capacity", "in_use", "_waiters", "_reserved_until")
 
     def __init__(self, env: "Environment", capacity: int = 1):
         self.env = env
         self.capacity = capacity
         self.in_use = 0
         self._waiters: Deque[Event] = deque()
+        self._reserved_until: Optional[float] = None
+
+    def _settle_reservation(self) -> None:
+        """Resolve an outstanding lazy hold: reclaim it if it expired, or
+        materialize its release event if it is still running (a contender is
+        about to queue behind it)."""
+        r = self._reserved_until
+        if r is None:
+            return
+        self._reserved_until = None
+        if self.env.now >= r:
+            self.in_use -= 1        # the phantom holder released in the past
+        else:
+            self.env._schedule(r, self.release)
+
+    def reserve(self, until: float) -> bool:
+        """Lazily hold one slot until sim time ``until`` (see class doc).
+        Returns False when the resource is busy or waited on — the caller
+        must then fall back to the normal acquire/timeout/release path."""
+        if self._reserved_until is not None:
+            if self.env.now >= self._reserved_until:
+                self.in_use -= 1
+                self._reserved_until = None
+            else:
+                return False        # an earlier lazy hold is still running
+        if self.in_use < self.capacity and not self._waiters:
+            self.in_use += 1
+            self._reserved_until = until
+            return True
+        return False
 
     def acquire(self) -> Event:
+        self._settle_reservation()
         evt = Event(self.env)
         if self.in_use < self.capacity:
             self.in_use += 1
@@ -322,7 +459,7 @@ class Environment:
     def __init__(self, seed: int = 0):
         self.now: float = 0.0
         self._heap: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
+        self._next_seq = itertools.count().__next__
         self._seed = seed
         self._streams: dict[str, RngStream] = {}
         self.events_processed = 0   # wall-clock throughput accounting
@@ -344,6 +481,10 @@ class Environment:
     def timeout(self, delay: float, value: Any = None) -> Timeout:
         return Timeout(self, delay, value)
 
+    def timeout_at(self, t: float, value: Any = None) -> Timeout:
+        """A timeout firing at *absolute* sim time ``t`` (bit-exact)."""
+        return Timeout(self, 0.0, value, at=t)
+
     def event(self) -> Event:
         return Event(self)
 
@@ -361,31 +502,55 @@ class Environment:
 
     # -- loop ---------------------------------------------------------------
     def _schedule(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        heapq.heappush(self._heap, (t, self._next_seq(), fn))
+
+    def schedule_at(self, t: float, fn: Callable[[], None]) -> None:
+        """Run a plain callback at absolute sim time ``t`` (>= now).
+
+        The cheapest way to model a timer: one heap entry, no Process or
+        Timeout objects. Used by demand-driven background machinery (netcfg
+        refills, lazy lock releases) whose per-firing work is plain state
+        mutation, not a coroutine."""
+        if t < self.now:
+            raise ValueError(f"schedule_at into the past: {t} < {self.now}")
+        heapq.heappush(self._heap, (t, self._next_seq(), fn))
 
     def run(self, until: Optional[float] = None) -> None:
-        while self._heap:
-            t, _, fn = self._heap[0]
-            if until is not None and t > until:
+        # localized loop: heap/pop bound once; the count is folded back in a
+        # finally so events_processed stays correct when a callback raises
+        heap = self._heap
+        pop = heapq.heappop
+        n = 0
+        try:
+            while heap:
+                if until is not None and heap[0][0] > until:
+                    self.now = until
+                    return
+                item = pop(heap)
+                self.now = item[0]
+                n += 1
+                item[2]()
+            if until is not None:
                 self.now = until
-                return
-            heapq.heappop(self._heap)
-            self.now = t
-            self.events_processed += 1
-            fn()
-        if until is not None:
-            self.now = until
+        finally:
+            self.events_processed += n
 
     def run_until_event(self, evt: Event, hard_limit: float = 1e12) -> Any:
-        while not evt.fired:
-            if not self._heap:
-                break
-            t, _, fn = heapq.heappop(self._heap)
-            if t > hard_limit:
-                raise RuntimeError("run_until_event exceeded hard limit")
-            self.now = t
-            self.events_processed += 1
-            fn()
+        heap = self._heap
+        pop = heapq.heappop
+        n = 0
+        try:
+            while not evt.fired:
+                if not heap:
+                    break
+                item = pop(heap)
+                if item[0] > hard_limit:
+                    raise RuntimeError("run_until_event exceeded hard limit")
+                self.now = item[0]
+                n += 1
+                item[2]()
+        finally:
+            self.events_processed += n
         if not evt.fired:
             raise RuntimeError("event never triggered")
         return evt._value

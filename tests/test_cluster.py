@@ -155,3 +155,153 @@ def test_hedged_requests_beat_stragglers():
     # hedged requests finish in ~hedge_after + exec, not 100x exec
     lats = sorted(i.e2e_latency for i in invs)
     assert lats[-1] < 2.0, f"straggler not mitigated: {lats}"
+
+
+# -- demand-driven netcfg replenisher -----------------------------------------
+
+def _make_daemon(env, wid=0):
+    from repro.core.abstractions import WorkerNodeInfo
+    from repro.core.costmodel import DirigentCosts
+    from repro.core.worker import WorkerDaemon
+    info = WorkerNodeInfo(worker_id=wid, name=f"w{wid}",
+                          ip=(10, 0, 0, 1), port=9000)
+    return WorkerDaemon(env, info, DirigentCosts())
+
+
+def test_netcfg_refill_instants_match_polling_loop():
+    """The demand-driven replenisher must refill at exactly the instants the
+    retired 25 ms polling loop would have — same grid, same accumulated
+    float-add chain — while processing far fewer events. The take plan
+    includes a burst that empties the pool (fresh-cost regime) and sparse
+    single takes (the common case the polling loop wasted 97% of simulator
+    events idling through)."""
+
+    # (delay-before, takes) — deliberately off-grid times and an over-drain
+    plan = [(0.003, 3), (0.0401, 70), (0.35, 1), (1.003, 10), (2.5001, 2)]
+
+    def run(demand_driven):
+        env = Environment(seed=0)
+        d = _make_daemon(env)
+        refills = []
+        orig_put = d._netcfg_pool.put
+
+        def spy_put(item):
+            refills.append(env.now)
+            orig_put(item)
+
+        d._netcfg_pool.put = spy_put
+        if not demand_driven:
+            # disarm the demand path and run the reference polling loop
+            # (verbatim the pre-PR 4 _netcfg_replenisher body)
+            d._netcfg_refill_pending = True
+
+            def poller(env):
+                while True:
+                    yield env.timeout(d.costs.netcfg_replenish_period)
+                    if d.node_alive and \
+                            len(d._netcfg_pool) < d.costs.netcfg_pool_size:
+                        d._netcfg_pool.put(object())
+
+            env.process(poller(env), name="poller")
+
+        def taker(env):
+            for delay, n in plan:
+                yield env.timeout(delay)
+                for _ in range(n):
+                    if len(d._netcfg_pool):
+                        d._netcfg_pool.items.popleft()
+                        d._arm_netcfg_refill()
+
+        env.process(taker(env), name="taker")
+        env.run(until=6.0)
+        return refills, len(d._netcfg_pool), env.events_processed
+
+    refills_d, pool_d, events_d = run(demand_driven=True)
+    refills_p, pool_p, events_p = run(demand_driven=False)
+    assert refills_d, "plan never drove the pool below target"
+    assert refills_d == refills_p          # bit-identical refill instants
+    assert pool_d == pool_p
+    assert events_d < events_p / 2         # ...at a fraction of the events
+    # (the gap is this small only because the plan keeps the pool draining;
+    # an idle pool costs the demand path zero events per tick forever)
+
+
+def test_netcfg_refill_stops_when_pool_full_and_on_node_death():
+    env = Environment(seed=1)
+    d = _make_daemon(env)
+    size = d.costs.netcfg_pool_size
+    d._netcfg_pool.items.popleft()
+    d._arm_netcfg_refill()
+    env.run(until=1.0)
+    assert len(d._netcfg_pool) == size     # refilled exactly back to target
+    assert not d._netcfg_refill_pending    # and went quiet
+    ev0 = env.events_processed
+    env.run(until=5.0)
+    assert env.events_processed == ev0     # a full pool costs zero events
+    # a dead node stops refilling (and never re-arms)
+    d._netcfg_pool.items.popleft()
+    d._arm_netcfg_refill()
+    d.fail_node()
+    env.run(until=10.0)
+    assert len(d._netcfg_pool) == size - 1
+    assert not d._netcfg_refill_pending
+
+
+# -- per-shard heartbeat wheel -------------------------------------------------
+
+def test_heartbeat_wheel_beats_at_per_process_instants():
+    """Beat instants are the per-worker ``(t_reg + phase) + k*period`` chains
+    of the retired one-process-per-worker model: the phase comes from the
+    same ``hb-{wid}`` stream, and consecutive beats differ by exactly one
+    period in accumulated float arithmetic."""
+    env, cl = make_cluster(seed=13)
+    cl.register_sync(Function(name="g", image_url="i", port=80))
+    env.run(until=4.0)
+    leader = cl.control_plane_leader()
+    period = cl.costs.worker_heartbeat_period
+    last = dict(leader.worker_last_hb)
+    env.run(until=4.0 + period)
+    for wid, t in leader.worker_last_hb.items():
+        assert t == last[wid] + period     # the worker's own float-add chain
+    # pre-wheel golden (recorded from the per-process model at this seed):
+    # worker 3's last beat before t=4.0
+    assert last[3] == 3.8565964981624683
+
+
+def test_heartbeat_wheel_eviction_time_matches_per_process_model():
+    """A worker that stops beating is evicted at the very sim time the
+    per-worker-process model evicted it (golden recorded pre-wheel)."""
+    env, cl = make_cluster(seed=13)
+    cl.register_sync(Function(name="g", image_url="i", port=80))
+    invs = [cl.invoke("g", exec_time=0.01) for _ in range(3)]
+    env.run(until=4.0)
+    leader = cl.control_plane_leader()
+    assert leader.worker_last_hb[3] == 3.8565964981624683
+    cl.fail_worker_daemon(3)
+    env.run(until=12.0)
+    evicts = [(t, d) for t, k, d in cl.collector.events
+              if k == "worker-evicted"]
+    assert evicts == [(5.5, 3)]
+    assert all(not i.failed for i in invs)
+    # recovery: the daemon comes back, resumes beating on its old schedule,
+    # and is not evicted again
+    cl.recover_worker_daemon(3)
+    env.run(until=20.0)
+    assert 3 in leader.worker_last_hb
+    assert len([1 for t, k, d in cl.collector.events
+                if k == "worker-evicted"]) == 1
+
+
+def test_heartbeat_wheel_one_process_per_shard():
+    """The wheel replaces O(n_workers) heartbeat processes with one driver
+    per CP shard, beating every worker in wid%shards order on ties."""
+    env, cl = make_cluster(seed=3, n_workers=12, cp_shards=4)
+    assert len(cl._hb_wheels) == 4
+    for k, wheel in enumerate(cl._hb_wheels):
+        assert wheel.proc is not None and wheel.proc.is_alive
+        wids = sorted(w for _, w in wheel.heap)
+        assert wids == [w for w in range(12) if w % 4 == k]
+    env.run(until=3.0)
+    leader = cl.control_plane_leader()
+    assert len(leader.worker_last_hb) == 12
+    assert all(t > 0 for t in leader.worker_last_hb.values())

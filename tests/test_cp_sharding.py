@@ -42,28 +42,33 @@ COLD_SCALING = dict(stable_window=1.0, panic_window=1.0,
                     scale_to_zero_grace=0.2, cpu_req_millis=100,
                     mem_req_mb=128)
 
-# Recorded from the pre-shard ControlPlane (see module docstring) with this
-# PR's worker-heartbeat boot fix applied to cluster.py — the fix starts each
+# Recorded from the pre-shard ControlPlane (see module docstring) with the
+# PR 2 worker-heartbeat boot fix applied to cluster.py — the fix starts each
 # worker's heartbeat at registration, which adds a few boot-window events but
-# leaves every latency statistic bit-identical at this scale. Any change to
-# these workloads invalidates the constants — re-record, don't tweak.
+# leaves every latency statistic bit-identical at this scale. The ``events``
+# fields were re-recorded for PR 4's demand-driven timers / heartbeat wheel /
+# lazy lock holds (158654→20896, 99302→10160): event totals legitimately
+# shrank ~8-10x while every latency statistic stayed bit-identical to the
+# pre-PR 4 values — which is exactly the claim these pins enforce. Any change
+# to these workloads invalidates the constants — re-record, don't tweak.
 GOLD7 = {"done": 240, "total": 240, "creations": 240, "teardowns": 240,
          "p50": 0.14846846481036485, "p99": 0.17291408266620184,
-         "lat_sum": 35.9401392552082, "events": 158654}
+         "lat_sum": 35.9401392552082, "events": 20896}
 GOLD8 = {"done": 400, "total": 400, "creations": 8,
          "p50": 0.0015260204436948754, "p99": 0.002034961221146396,
-         "lat_sum": 0.6199089000305911, "events": 99302}
+         "lat_sum": 0.6199089000305911, "events": 10160}
 
 # Recorded from PR 2's static-hash sharded CP at cp_shards=4 (same tree as
 # above plus the PR 2 sharding layer): pins that the indirection table +
 # work-stealing spill order are no-ops while rebalancing is off and capacity
-# never forces a spill. Re-record, don't tweak.
+# never forces a spill. ``events`` re-recorded for PR 4 (see above).
+# Re-record, don't tweak.
 GOLD7_S4 = {"done": 240, "total": 240, "creations": 240, "teardowns": 240,
             "p50": 0.14856441964943767, "p99": 0.17284698168466597,
-            "lat_sum": 35.95150878463096, "events": 158957}
+            "lat_sum": 35.95150878463096, "events": 21182}
 GOLD8_S4 = {"done": 400, "total": 400, "creations": 8,
             "p50": 0.0015260204436948754, "p99": 0.002034961221146396,
-            "lat_sum": 0.6199089000305911, "events": 99458}
+            "lat_sum": 0.6199089000305911, "events": 10327}
 
 
 def _preload(cl, names, scaling_kw):

@@ -1,0 +1,69 @@
+"""CI event-budget guard: a flake-free perf-regression tripwire.
+
+The simulator is seed-deterministic down to the total number of heap events
+it processes (``env.events_processed``), so the cheapest possible perf guard
+is an exact event *budget* for a fixed workload: if a change quietly
+reintroduces an O(n_workers) background tax (per-worker polling timers,
+per-beat sub-processes — the regressions PR 4 removed), the count blows past
+the budget long before wall-clock noise could ever detect it, and the test
+fails deterministically on any machine.
+
+The budget below was recorded with the PR 4 engine (demand-driven netcfg
+refills, per-shard heartbeat wheel, lazy heartbeat lock holds). The same
+workload on the pre-PR 4 engine processes ~8x more events, so the guard has
+a wide, honest margin. If you *legitimately* reduce event counts further,
+tighten the budget; if a feature genuinely needs more events, justify the
+new number in the commit that raises it — never raise it to paper over an
+accidental regression.
+"""
+from repro.core import Cluster, Function, ScalingConfig
+from repro.simcore import Environment
+
+# exact count recorded for the workload below; see module docstring before
+# touching either number
+EVENT_BUDGET = 8_525
+WORKLOAD = dict(n_workers=50, n_functions=40, waves=5, rate=200.0,
+                horizon=16.0, seed=2024)
+
+
+def run_fixed_cell():
+    w = WORKLOAD
+    env = Environment(seed=w["seed"])
+    cl = Cluster(env, n_workers=w["n_workers"], runtime="firecracker")
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(w["n_functions"])]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="img://budget", port=80,
+            scaling=ScalingConfig(stable_window=1.0, panic_window=1.0,
+                                  scale_to_zero_grace=0.2)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        for _ in range(w["waves"]):
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+                yield env.timeout(1.0 / w["rate"])
+            # gap > scale-to-zero grace + autoscale tick: every wave is a
+            # full cold scale-up, so the budget covers the whole creation
+            # machinery, not just the warm path
+            yield env.timeout(2.5)
+
+    env.process(driver(env), name="budget-driver")
+    env.run(until=w["horizon"])
+    return env.events_processed, cl.collector.sandbox_creations
+
+
+def test_event_budget_and_determinism():
+    events_a, creations_a = run_fixed_cell()
+    events_b, creations_b = run_fixed_cell()
+    # seed-determinism is what makes an exact budget flake-free: two
+    # identical runs must process the identical event sequence
+    assert (events_a, creations_a) == (events_b, creations_b)
+    assert creations_a > 0, "workload did no real work"
+    assert events_a <= EVENT_BUDGET, (
+        f"event budget exceeded: {events_a} > {EVENT_BUDGET} — an "
+        f"O(n_workers) background tax (idle polling timers, per-beat "
+        f"sub-processes) has probably crept back into the hot path")

@@ -154,7 +154,7 @@ def test_dp_failure_drops_inflight_and_recovers():
     long_inv = cl.invoke("f", exec_time=30.0)
     env.run(until=6.0)
     owner_dp = [dp for dp in cl.data_planes
-                if long_inv in dp.inflight_requests][0]
+                if long_inv.inv_id in dp.inflight_requests][0]
     cl.fail_data_plane(owner_dp.dp_id)
     env.run(until=7.0)
     assert long_inv.failed            # in-flight requests die with the DP

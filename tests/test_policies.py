@@ -13,6 +13,7 @@ from repro.simcore import Environment
 class Ep:
     in_use: int = 0
     capacity: int = 4
+    draining: bool = False
 
     @property
     def free(self):

@@ -278,3 +278,235 @@ def test_unobserved_process_failure_raises():
     env.process(child(env))
     with pytest.raises(ValueError):
         env.run()
+
+
+# -- sole-waiter Timeout fast path -------------------------------------------
+# ``yield env.timeout(x)`` resumes the process straight from the timer
+# callback (Timeout._waiter) instead of the generic callback list. These pin
+# the interrupt/kill semantics on that path: detaching must clear the waiter
+# slot, and the stale timer firing later must not resume (or double-drive)
+# the process.
+
+def test_interrupt_detaches_sole_waiter_timeout():
+    env = Environment()
+    log = []
+
+    def sleeper(env):
+        try:
+            yield env.timeout(100.0)
+            log.append("overslept")
+        except Interrupt as it:
+            log.append(("interrupted", env.now, it.cause))
+        # re-wait on a NEW timeout: the stale 100 s timer firing later must
+        # not wake this yield
+        yield env.timeout(200.0)
+        log.append(("woke", env.now))
+
+    p = env.process(sleeper(env))
+
+    def interrupter(env):
+        yield env.timeout(1.0)
+        p.interrupt("wake")
+
+    env.process(interrupter(env))
+    env.run()
+    assert log == [("interrupted", 1.0, "wake"), ("woke", 201.0)]
+
+
+def test_kill_detaches_sole_waiter_timeout():
+    env = Environment()
+    log = []
+
+    def sleeper(env):
+        yield env.timeout(10.0)
+        log.append("should not happen")
+
+    p = env.process(sleeper(env))
+
+    def killer(env):
+        yield env.timeout(1.0)
+        p.kill()
+
+    env.process(killer(env))
+    env.run()   # the orphaned 10 s timer fires with no waiter: must be a no-op
+    assert log == []
+    assert not p.is_alive
+    assert env.now == 10.0
+
+
+def test_interrupted_process_timeout_fires_while_parent_waits():
+    """The stale timer must stay detached even when the process has since
+    finished and a parent already consumed its result."""
+    env = Environment()
+    out = []
+
+    def child(env):
+        try:
+            yield env.timeout(50.0)
+        except Interrupt:
+            return "early"
+        return "late"
+
+    def parent(env):
+        p = env.process(child(env))
+        yield env.timeout(1.0)
+        p.interrupt()
+        val = yield p
+        out.append((env.now, val))
+
+    env.process(parent(env))
+    env.run()
+    assert out == [(1.0, "early")]
+    assert env.now == 50.0          # the detached timer still fired, harmlessly
+
+
+def test_timeout_at_exact_instant():
+    """timeout_at(t) fires at t bit-exactly even when now + (t - now) != t."""
+    env = Environment()
+    # 14 accumulated 25 ms grid steps: a value the netcfg/heartbeat float-add
+    # chains actually produce, and one that a relative timeout from now=0.1
+    # cannot hit (0.1 + (t - 0.1) rounds off the last bit)
+    target = 0.0
+    for _ in range(14):
+        target += 0.025
+    hits = []
+
+    def proc(env):
+        yield env.timeout(0.1)
+        # the relative route would miss the instant: this is the rounding
+        # error the absolute-deadline timeout exists to avoid
+        assert env.now + (target - env.now) != target
+        yield env.timeout_at(target)
+        hits.append(env.now)
+
+    env.process(proc(env))
+    env.run()
+    assert hits == [target]
+    with pytest.raises(ValueError):
+        env.timeout_at(env.now - 1.0)
+
+
+# -- AnyOf loser-callback leak -------------------------------------------------
+
+def test_any_of_detaches_loser_callbacks():
+    """Regression: a long-lived event that repeatedly loses any_of races must
+    not accumulate one dead callback per race (at most the single shared
+    ``_observed`` sentinel remains)."""
+    env = Environment()
+    never = env.event()
+
+    def racer(env):
+        for _ in range(25):
+            idx, _ = yield env.any_of([never, env.timeout(1.0)])
+            assert idx == 1
+    p = env.process(racer(env))
+    env.run_until_event(p)
+    assert len(never.callbacks) <= 1
+
+
+def test_any_of_detached_loser_failure_stays_observed():
+    """A raced-and-lost process that later fails must not crash the event
+    loop as an 'unobserved failure' — losing an any_of race counts as being
+    observed, with or without the detach optimization."""
+    env = Environment()
+
+    def doomed(env):
+        yield env.timeout(5.0)
+        raise RuntimeError("late failure of the race loser")
+
+    def racer(env):
+        idx, _ = yield env.any_of([env.process(doomed(env)),
+                                   env.timeout(1.0)])
+        assert idx == 1
+
+    p = env.process(racer(env))
+    env.run()           # the loser fails at t=5: must be swallowed
+    assert p.fired and env.now == 5.0
+
+
+def test_any_of_still_races_correctly_after_detach_fix():
+    env = Environment()
+    log = []
+
+    def proc(env):
+        first = env.timeout(2.0, "fast")
+        idx, val = yield env.any_of([env.timeout(5.0, "slow"), first])
+        log.append((env.now, idx, val))
+        # the loser (5 s timer) fires later; the finished AnyOf must ignore it
+        idx2, val2 = yield env.any_of([env.timeout(1.0, "again"),
+                                       env.timeout(9.0)])
+        log.append((env.now, idx2, val2))
+
+    env.process(proc(env))
+    env.run()
+    assert log == [(2.0, 1, "fast"), (3.0, 0, "again")]
+
+
+# -- schedule_at / Resource.reserve (zero-event timer devices) ----------------
+
+def test_schedule_at_runs_callback_at_absolute_time():
+    env = Environment()
+    hits = []
+    env.schedule_at(2.5, lambda: hits.append(env.now))
+    env.run()
+    assert hits == [2.5]
+    with pytest.raises(ValueError):
+        env.schedule_at(env.now - 1.0, lambda: None)
+
+
+def test_resource_reserve_uncontended_is_reclaimed_lazily():
+    env = Environment()
+    res = env.resource(capacity=1)
+    assert res.reserve(until=1.0)
+    assert res.in_use == 1
+    ev0 = env.events_processed
+
+    def late(env):
+        yield env.timeout(5.0)      # well past the reservation
+        got = res.acquire()
+        assert got.fired or got.triggered   # granted synchronously
+        res.release()
+
+    p = env.process(late(env))
+    env.run_until_event(p)
+    assert res.in_use == 0
+    # the reservation itself contributed no events: just the process + timeout
+    assert env.events_processed - ev0 <= 4
+
+
+def test_resource_reserve_contender_waits_until_exact_release():
+    env = Environment()
+    res = env.resource(capacity=1)
+    log = []
+
+    def holder(env):
+        yield env.timeout(2.0)
+        assert res.reserve(until=env.now + 3.0)     # holds [2, 5)
+
+    def contender(env):
+        yield env.timeout(3.0)
+        t0 = env.now
+        yield res.acquire()
+        log.append((t0, env.now))
+        res.release()
+
+    env.process(holder(env))
+    env.process(contender(env))
+    env.run()
+    assert log == [(3.0, 5.0)]      # waited exactly until the phantom release
+    assert res.in_use == 0
+
+
+def test_resource_reserve_refuses_when_busy_or_waited_on():
+    env = Environment()
+    res = env.resource(capacity=1)
+
+    def proc(env):
+        yield res.acquire()
+        assert not res.reserve(until=env.now + 1.0)   # busy
+        res.release()
+        assert res.reserve(until=env.now + 1.0)
+        assert not res.reserve(until=env.now + 2.0)   # reservation running
+
+    p = env.process(proc(env))
+    env.run_until_event(p)
