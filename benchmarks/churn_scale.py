@@ -28,6 +28,13 @@ partition convoys on the hot shard; the sweep records shards 1→8 with the
 load-adaptive rebalancer + work-stealing spill off vs on
 (``cp_rebalance_enabled``, core/control_plane.py),
 
+plus a *single dominant function* sweep (``single_hot_fn``): one function
+carries ~80% of the creation load — the irreducible hotspot whole-function
+rebalancing cannot fix — recorded at shards 4/8 with per-function creation
+sharding (``cp_fn_split_enabled``, fn→shard-set ownership) off vs on; the
+split must cut the hot shard's lock wait and the post-warmup tail at equal
+shard count with total creations unchanged,
+
 plus a live-mode smoke cell (``--live-smoke`` runs it alone): the same churn
 shape against workers whose ``create_hook`` builds a *real* replica payload,
 so wall-clock creation throughput covers actual sandbox construction work,
@@ -175,7 +182,11 @@ def creations_per_sim_s(collector):
 def skew_point(n_workers: int, rate: float, duration: float,
                n_functions: int = 128, zipf_s: float = 1.2,
                burst_period: float = 4.0, seed: int = 91,
-               cp_shards: int = 1, rebalance: bool = False) -> dict:
+               cp_shards: int = 1, rebalance: bool = False,
+               weights: "np.ndarray | None" = None,
+               names_prefix: str = "z",
+               fn_split: bool = False,
+               fn_split_max_shards: "int | None" = None) -> dict:
     """One skew cell: Zipf-popularity function mix, unison cold bursts.
 
     Function *i* owns a Zipf(s) share of the offered rate and receives it as
@@ -190,12 +201,20 @@ def skew_point(n_workers: int, rate: float, duration: float,
     lock convoy into request latency. Latency stats skip the first two waves
     (warm-up: the rebalancer needs a wave of signal before it reacts).
     Records the per-shard lock-convoy split plus the rebalancer /
-    work-stealing counters next to the usual churn accounting."""
+    work-stealing counters next to the usual churn accounting.
+
+    ``weights`` overrides the Zipf popularity vector (the ``single_hot_fn``
+    cell passes one function ~80% of the load); ``fn_split`` enables the
+    per-function creation sharding escalation (``cp_fn_split_enabled``)."""
     env = Environment(seed=seed)
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
-                       cp_shards=cp_shards, cp_rebalance_enabled=rebalance)
-    weights = zipf_weights(n_functions, zipf_s)
-    names = [f"z{i}" for i in range(n_functions)]
+                       cp_shards=cp_shards, cp_rebalance_enabled=rebalance,
+                       cp_fn_split_enabled=fn_split,
+                       cp_fn_split_max_shards=fn_split_max_shards)
+    if weights is None:
+        weights = zipf_weights(n_functions, zipf_s)
+    n_functions = len(weights)
+    names = [f"{names_prefix}{i}" for i in range(n_functions)]
     per_period = rate * burst_period
     plan = []
     for i, name in enumerate(names):
@@ -226,12 +245,14 @@ def skew_point(n_workers: int, rate: float, duration: float,
         "n_functions": n_functions, "zipf_s": zipf_s,
         "burst_period": burst_period, "warmup": warmup,
         "cp_shards": cp_shards,
-        "rebalance": rebalance, "offered": len(plan),
+        "rebalance": rebalance, "fn_split": fn_split, "offered": len(plan),
         "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
         "events": env.events_processed - ev0,
         "creations": cl.collector.sandbox_creations,
         "creations_per_sim_s": creations_per_sim_s(cl.collector),
         "fn_migrations": cl.collector.fn_migrations,
+        "fn_splits": cl.collector.fn_splits,
+        "fn_merges": cl.collector.fn_merges,
         "steals": cl.collector.steals,
         "steal_probes": cl.collector.steal_probes,
         "lock_wait_sim_s": round(sum(lock_waits), 4),
@@ -241,6 +262,31 @@ def skew_point(n_workers: int, rate: float, duration: float,
         "p99_ms": round(stats["p99"] * 1e3, 3),
         "mean_ms": round(stats["mean"] * 1e3, 3),
     }
+
+
+def single_hot_fn_point(n_workers: int, rate: float, duration: float,
+                        n_functions: int = 64, hot_share: float = 0.8,
+                        burst_period: float = 4.0, seed: int = 93,
+                        cp_shards: int = 4, rebalance: bool = True,
+                        fn_split: bool = False,
+                        fn_split_max_shards: "int | None" = None) -> dict:
+    """One *dominant-function* cell: a single function carries ``hot_share``
+    (~80%) of the offered creation load, the rest spread uniformly over the
+    other functions — the irreducible-hotspot regime whole-function
+    rebalancing cannot fix (moving the hot function just relocates its
+    convoy). This is the cell per-function creation sharding
+    (``cp_fn_split_enabled``) exists to improve: at equal shard count,
+    splitting the hot function across a shard-set must cut the hot shard's
+    lock wait and the post-warmup tail while total creations stay equal."""
+    weights = np.full(n_functions, (1.0 - hot_share) / (n_functions - 1))
+    weights[0] = hot_share
+    cell = skew_point(n_workers, rate, duration, burst_period=burst_period,
+                      seed=seed, cp_shards=cp_shards, rebalance=rebalance,
+                      weights=weights, names_prefix="h", fn_split=fn_split,
+                      fn_split_max_shards=fn_split_max_shards)
+    cell["hot_share"] = hot_share
+    cell["fn_split_max_shards"] = fn_split_max_shards
+    return cell
 
 
 def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
@@ -355,11 +401,15 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
           f"-> {speedup:.1f}x index speedup", flush=True)
 
     # -- churn grid ---------------------------------------------------------
+    # 10k/20k workers joined the grid once the PR 4 event tax made them
+    # wall-clock feasible: with heartbeats ~1 event/beat and netcfg timers
+    # demand-driven, cost now scales with the *workload*, and these cells
+    # record where the next bottleneck bites (see docs/benchmarks.md)
     if smoke:
         grid = [(93, 500, 1.0), (1000, 1000, 1.0)]
     else:
         grid = [(w, r, 4.0)
-                for w in (93, 1000, 2500, 5000)
+                for w in (93, 1000, 2500, 5000, 10_000, 20_000)
                 for r in (1000, 2500)]
     for n_workers, rate, duration in grid:
         cell = churn_point(n_workers, rate, duration)
@@ -385,8 +435,12 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
     if smoke:
         shard_cells = [(1000, 2000.0, 1.0, s) for s in (1, 4)]
     else:
+        # the 20k rows pair with the grid's cp_shards=1 cells: at that
+        # worker count the C9 heartbeat tax alone (~53% of one lock)
+        # saturates an unsharded CP — sharding is the fix, not an option
         shard_cells = ([(5000, 2500.0, 4.0, s) for s in (1, 2, 4, 8)]
-                       + [(5000, 5000.0, 4.0, s) for s in (1, 2, 4)])
+                       + [(5000, 5000.0, 4.0, s) for s in (1, 2, 4)]
+                       + [(20_000, 2500.0, 4.0, s) for s in (4, 8)])
     result["cp_shard_sweep"] = []
     for n_workers, rate, duration, s in shard_cells:
         cell = churn_point(n_workers, rate, duration, cp_shards=s)
@@ -420,6 +474,51 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
               f"migrations={cell['fn_migrations']} steals={cell['steals']}, "
               f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
               f"mean={cell['mean_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+
+    # -- single dominant function (the fn->shard-set regime) ----------------
+    # one function carries ~80% of the creation load: whole-function
+    # rebalancing cannot fix its shard (static and rebalance-on baselines),
+    # per-function creation sharding can (fn_split on) — recorded at equal
+    # shard counts so the improvement is attributable to the split alone
+    if smoke:
+        hot_cells = [(500, 1000.0, 8.0, 4, True, False, None),
+                     (500, 1000.0, 8.0, 4, True, True, None)]
+    else:
+        # rate 1500 (hot fn = 1200 creations/s) keeps the cell in the regime
+        # where the CP scale lock is the *binding* constraint: all of one
+        # function's dispatches go through one DP (function-hash steering),
+        # and a DP's port pool sustains ~1400 conn/s (28k ports / 20s
+        # TIME_WAIT, the C5 ceiling) — at hot rates above it the cell would
+        # measure port exhaustion, which no CP-side mechanism can fix
+        hot_cells = [(5000, 1500.0, 20.0, s, rb, sp, mx)
+                     for s, rb, sp, mx in (
+                         # static baseline / rebalance-only (ping-pongs the
+                         # hotspot) / split-only (the clean off-vs-on pair)
+                         # / both escalations together
+                         (4, False, False, None),
+                         (4, True, False, None),
+                         (4, False, True, None),
+                         (4, True, True, None),
+                         (8, False, False, None),
+                         (8, True, False, None),
+                         (8, False, True, 8),
+                         (8, True, True, 8),
+                     )]
+    result["single_hot_fn"] = []
+    for n_workers, rate, duration, s, rb, sp, mx in hot_cells:
+        cell = single_hot_fn_point(n_workers, rate, duration, cp_shards=s,
+                                   rebalance=rb, fn_split=sp,
+                                   fn_split_max_shards=mx)
+        result["single_hot_fn"].append(cell)
+        print(f"workers={n_workers} hot80 rate={rate:.0f} cp_shards={s} "
+              f"rebalance={'on' if rb else 'off'} "
+              f"split={'on' if sp else 'off'}: "
+              f"{cell['creations_per_sim_s']} creations/sim_s, "
+              f"hot_lock_wait={cell['lock_wait_hottest_shard_s']}s, "
+              f"splits={cell['fn_splits']} merges={cell['fn_merges']} "
+              f"migrations={cell['fn_migrations']}, "
+              f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
               f"done={cell['done']}/{cell['total']}", flush=True)
 
     # -- live-mode smoke (real create_hook payloads; ROADMAP item) ----------
@@ -464,6 +563,15 @@ def run(reporter, quick: bool = True) -> dict:
             f"creations_per_sim_s={cell['creations_per_sim_s']};"
             f"hot_lock_wait_s={cell['lock_wait_hottest_shard_s']};"
             f"migrations={cell['fn_migrations']};steals={cell['steals']}")
+    for cell in result.get("single_hot_fn", []):
+        reporter.add(
+            f"churn/hotfn/shards={cell['cp_shards']}"
+            f"/rebalance={'on' if cell['rebalance'] else 'off'}"
+            f"/split={'on' if cell['fn_split'] else 'off'}",
+            cell["p50_ms"] * 1e3,
+            f"p99_ms={cell['p99_ms']};"
+            f"hot_lock_wait_s={cell['lock_wait_hottest_shard_s']};"
+            f"splits={cell['fn_splits']};merges={cell['fn_merges']}")
     return result
 
 

@@ -58,7 +58,13 @@ def preload_functions(system, names: List[str],
 
 def run_open_loop(env: Environment, system, plan: List[tuple],
                   until_extra: float = 120.0) -> List:
-    """Submit (t, fn, exec_time) invocations open-loop; returns Invocations."""
+    """Submit (t, fn, exec_time) invocations open-loop; returns Invocations.
+
+    Plan times are offsets from *traffic start* (``env.now`` at call time),
+    and so is the run horizon: boot work already on the clock — at 20k
+    workers the O(n_workers)-fsyncs registration alone is ~30 s of sim time
+    — must not eat the measurement window, or large-worker cells silently
+    truncate mid-submission."""
     invs = []
 
     def driver(env):
@@ -70,7 +76,7 @@ def run_open_loop(env: Environment, system, plan: List[tuple],
             invs.append(system.invoke(fn, exec_time=et))
 
     env.process(driver(env), name="bench-driver")
-    horizon = (plan[-1][0] if plan else 0.0) + until_extra
+    horizon = env.now + (plan[-1][0] if plan else 0.0) + until_extra
     env.run(until=horizon)
     return invs
 

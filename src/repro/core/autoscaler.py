@@ -33,9 +33,22 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque
+from typing import Deque, List
 
 from repro.core.abstractions import ScalingConfig
+
+
+def split_shares(desired: int, k: int, cursor: int) -> List[int]:
+    """Divide a desired replica count across ``k`` subshards of a split
+    function (control_plane.py ``cp_fn_split_enabled``): everyone gets
+    ``desired // k``, and the ``r = desired % k`` residual replicas land on
+    the subshards at positions ``(cursor + i) % k``. The caller advances
+    ``cursor`` by ``r`` after each assignment, so over successive autoscale
+    decisions the residual rotates deterministically — no subshard
+    permanently carries the remainder, and two runs with the same event
+    sequence produce the same shares (the split path stays seed-exact)."""
+    base, r = divmod(desired, k)
+    return [base + (1 if (i - cursor) % k < r else 0) for i in range(k)]
 
 
 @dataclass

@@ -27,7 +27,15 @@ migrates hot functions off the hottest shard via an explicit handoff,
 keeping a skewed (Zipf-popularity) function mix from convoying on one scale
 lock; ``cp_rebalance_period`` / ``cp_rebalance_hot_factor`` /
 ``cp_rebalance_max_moves`` override the ``DirigentCosts`` defaults. The
-default (off) keeps the static hash partition bit-identically. Operator
+default (off) keeps the static hash partition bit-identically.
+
+Per-function creation sharding (``cp_fn_split_*``): with
+``cp_fn_split_enabled=True`` the rebalancer escalates past whole-function
+moves — a single function whose creation load dominates its shard (a load no
+move can fix) is *split* across a shard-set, every subshard creating for it
+under its own scale lock on its own worker partition, and merged back when
+its heat decays (``cp_fn_split_max_shards`` / ``cp_fn_split_min_load`` /
+``cp_fn_split_cooldown`` override the ``DirigentCosts`` defaults). Operator
 guidance for all of these lives in docs/operations.md.
 """
 from __future__ import annotations
@@ -87,6 +95,10 @@ class Cluster:
                  cp_rebalance_period: Optional[float] = None,
                  cp_rebalance_hot_factor: Optional[float] = None,
                  cp_rebalance_max_moves: Optional[int] = None,
+                 cp_fn_split_enabled: bool = False,
+                 cp_fn_split_max_shards: Optional[int] = None,
+                 cp_fn_split_min_load: Optional[float] = None,
+                 cp_fn_split_cooldown: Optional[float] = None,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
@@ -107,7 +119,11 @@ class Cluster:
                          rebalance_enabled=cp_rebalance_enabled,
                          rebalance_period=cp_rebalance_period,
                          rebalance_hot_factor=cp_rebalance_hot_factor,
-                         rebalance_max_moves=cp_rebalance_max_moves)
+                         rebalance_max_moves=cp_rebalance_max_moves,
+                         fn_split_enabled=cp_fn_split_enabled,
+                         fn_split_max_shards=cp_fn_split_max_shards,
+                         fn_split_min_load=cp_fn_split_min_load,
+                         fn_split_cooldown=cp_fn_split_cooldown)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [

@@ -60,9 +60,33 @@ heat) from the hottest shard to the coldest whenever the imbalance exceeds
 ``DirigentCosts`` (``cp_rebalance_*``, ``cp_steal_backoff``) and are
 documented in docs/operations.md.
 
+Per-function creation sharding (``cp_fn_split_enabled``, default off). The
+rebalancer moves *whole* functions, so one function whose creation load
+alone saturates a scale lock is an irreducible hotspot — no partition of
+whole functions fixes it. The escalation generalizes ownership from
+``fn→shard`` to ``fn→shard-set``: the indirection-table entry becomes a
+tuple (home subshard first), and the function gets one ``FunctionSlice``
+per subshard — its own sandbox set, creating count and heat — so each
+subshard creates under **its own scale lock** on **its own worker
+partition** and flushes endpoints through **its own queue**. The global
+``FunctionState`` (one autoscaler state machine, one merged sandbox map)
+stays the single source of truth: the home subshard computes the global
+desired count once per instant and divides it into per-slice targets by
+deterministic round-robin residual assignment (``autoscaler.split_shares``),
+so scale-to-zero and eviction reconciles always see a coherent global
+replica count. The rebalancer triggers a split when the hot shard's load is
+dominated by one function a whole move cannot fix (projected share exceeds
+the hot–cold gap), via the migration handoff generalized to shard-sets
+(quiesce *all* members in id order → slice → publish the tuple → persist a
+``shardmap/<fn>`` shard-set override off the critical path), and merges it
+back when slice heat decays below ``cp_fn_split_min_load`` (cooldown on
+both edges bounds flapping). ``recover_as_leader`` replays shard-set
+overrides, so failover keeps splits.
+
 Metric ingestion from DPs needs no lock in this model (autoscaler windows
 are per-function); the urgent fast path reconciles under the function's
-owning shard only. ``cp_shards=1`` (the default) degenerates to exactly the
+owning shard only (all subshards, for a split function). ``cp_shards=1``
+(the default) degenerates to exactly the
 pre-shard control plane — one lock, one autoscale loop, one health loop, one
 flush queue, same event sequence — which tests pin bit-identically against
 recorded fig7/fig8 goldens, and with rebalancing off (the default) the
@@ -79,7 +103,7 @@ from typing import Deque, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
 from repro.core.abstractions import (
     Function, Sandbox, SandboxState, WorkerNodeInfo,
 )
-from repro.core.autoscaler import FunctionAutoscalerState
+from repro.core.autoscaler import FunctionAutoscalerState, split_shares
 from repro.core.costmodel import DirigentCosts
 from repro.core.metrics import Collector
 from repro.core.placement import PartitionedPlacer, make_placer
@@ -87,6 +111,23 @@ from repro.simcore import Environment, Interrupt, stable_hash
 
 if TYPE_CHECKING:
     from repro.core.cluster import Cluster
+
+
+@dataclass
+class FunctionSlice:
+    """One subshard's slice of a *split* function (``cp_fn_split_enabled``).
+
+    The global ``FunctionState`` keeps the authoritative sandbox map and the
+    single autoscaler state machine; a slice tracks which of those sandboxes
+    this subshard owns, its in-flight creations, its share of the desired
+    count (``target``, assigned by the home subshard via round-robin
+    residual shares) and its creation heat (the merge signal)."""
+
+    shard_id: int
+    sandbox_ids: set = field(default_factory=set)
+    creating: int = 0
+    heat: float = 0.0
+    target: int = 0
 
 
 @dataclass
@@ -100,11 +141,41 @@ class FunctionState:
     # ``cooldown_until`` rate-limits re-migrating the same function
     heat: float = 0.0
     cooldown_until: float = 0.0
+    # shard-set ownership (None = sole owner, the common case): subshard id
+    # -> FunctionSlice while split. ``rr_cursor``/``targets_t`` drive the
+    # round-robin residual target assignment; ``split_cooldown_until``
+    # applies hysteresis to both the split and the merge edge.
+    slices: Optional[Dict[int, FunctionSlice]] = None
+    rr_cursor: int = 0
+    targets_t: float = -1.0
+    split_cooldown_until: float = 0.0
 
     @property
     def ready_count(self) -> int:
         return sum(1 for s in self.sandboxes.values()
                    if s.state == SandboxState.READY)
+
+    def slice_of(self, sandbox_id: int) -> Optional[FunctionSlice]:
+        """The slice owning ``sandbox_id`` (None when unsplit / unowned)."""
+        if self.slices:
+            for sl in self.slices.values():
+                if sandbox_id in sl.sandbox_ids:
+                    return sl
+        return None
+
+    def slice_ready(self, sl: FunctionSlice) -> int:
+        sandboxes = self.sandboxes
+        return sum(1 for sid in sl.sandbox_ids
+                   if sid in sandboxes
+                   and sandboxes[sid].state == SandboxState.READY)
+
+    def drop_sandbox(self, sandbox_id: int) -> Optional[Sandbox]:
+        """Remove a sandbox from the global map and its owning slice."""
+        sb = self.sandboxes.pop(sandbox_id, None)
+        if sb is not None and self.slices:
+            for sl in self.slices.values():
+                sl.sandbox_ids.discard(sandbox_id)
+        return sb
 
 
 class ControlPlaneShard:
@@ -156,7 +227,11 @@ class ControlPlane:
                  rebalance_enabled: bool = False,
                  rebalance_period: Optional[float] = None,
                  rebalance_hot_factor: Optional[float] = None,
-                 rebalance_max_moves: Optional[int] = None):
+                 rebalance_max_moves: Optional[int] = None,
+                 fn_split_enabled: bool = False,
+                 fn_split_max_shards: Optional[int] = None,
+                 fn_split_min_load: Optional[float] = None,
+                 fn_split_cooldown: Optional[float] = None):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -195,6 +270,22 @@ class ControlPlane:
         self.rebalance_max_moves = (costs.cp_rebalance_max_moves
                                     if rebalance_max_moves is None
                                     else rebalance_max_moves)
+        # per-function creation sharding (fn -> shard-set escalation); like
+        # rebalancing, meaningless with a single shard
+        self.fn_split_enabled = bool(fn_split_enabled) and self.cp_shards > 1
+        # clamp: a shard-set needs ≥ 2 members — below that the escalation
+        # would select a dominant function every tick (suppressing whole
+        # moves for it) yet never be able to split it
+        self.fn_split_max_shards = max(2, costs.cp_fn_split_max_shards
+                                       if fn_split_max_shards is None
+                                       else fn_split_max_shards)
+        self.fn_split_min_load = (costs.cp_fn_split_min_load
+                                  if fn_split_min_load is None
+                                  else fn_split_min_load)
+        self.fn_split_cooldown = (costs.cp_fn_split_cooldown
+                                  if fn_split_cooldown is None
+                                  else fn_split_cooldown)
+        self._split_fns: set = set()
         self._migration_inflight = False
 
     # -- shard routing ---------------------------------------------------------------
@@ -204,9 +295,24 @@ class ControlPlane:
         return stable_hash(name) % self.cp_shards
 
     def _fn_shard_id(self, name: str) -> int:
+        """Home shard id. Table entries are an ``int`` for a sole owner or a
+        tuple (shard-set, home subshard first) for a split function; routing
+        that needs *one* shard (ep updates with no slice context, urgent
+        reconcile entry, eviction fan-out) goes to the home subshard."""
         k = self.fn_shard_table.get(name)
         if k is None:
             k = self._default_shard_id(name)
+        elif type(k) is not int:
+            k = k[0]
+        return k
+
+    def _fn_shard_ids(self, name: str) -> Tuple[int, ...]:
+        """Full owning shard-set (home first); ``(home,)`` when unsplit."""
+        k = self.fn_shard_table.get(name)
+        if k is None:
+            return (self._default_shard_id(name),)
+        if type(k) is int:
+            return (k,)
         return k
 
     def _fn_shard(self, name: str) -> ControlPlaneShard:
@@ -261,7 +367,9 @@ class ControlPlane:
             self._loops.append(self.env.process(
                 self._health_loop(shard),
                 name=f"cp{self.cp_id}-health-{shard.shard_id}"))
-        if self.rebalance_enabled:
+        if self.rebalance_enabled or self.fn_split_enabled:
+            # the split/merge escalation rides the rebalancer tick; enabling
+            # either mechanism starts the loop (each stays gated inside it)
             self._loops.append(self.env.process(
                 self._rebalance_loop(),
                 name=f"cp{self.cp_id}-rebalance"))
@@ -282,9 +390,18 @@ class ControlPlane:
         benchmarks / recovery)."""
         st = FunctionState(function=fn,
                            autoscaler=FunctionAutoscalerState(fn.scaling))
-        self.functions[fn.name] = st
         k = self.fn_shard_table.setdefault(fn.name,
                                            self._default_shard_id(fn.name))
+        if type(k) is not int:
+            # re-registering a currently-split function: the fresh state is
+            # unsplit, so collapse the shard-set back to its home subshard
+            # (consistent table ↔ shard maps; the rebalancer may re-split)
+            for sid in k:
+                self.shards[sid].functions.pop(fn.name, None)
+            self._split_fns.discard(fn.name)
+            k = k[0]
+            self.fn_shard_table[fn.name] = k
+        self.functions[fn.name] = st
         self.shards[k].functions[fn.name] = st
         return st
 
@@ -304,11 +421,15 @@ class ControlPlane:
     def deregister_function(self, name: str) -> Generator:
         yield from self.store.write(f"function/{name}", None)
         st = self.functions.pop(name, None)
-        self._fn_shard(name).functions.pop(name, None)
+        for sid in self._fn_shard_ids(name):
+            self.shards[sid].functions.pop(name, None)
+        self._split_fns.discard(name)
         k = self.fn_shard_table.pop(name, None)
-        if (self.rebalance_enabled and k is not None
-                and k != self._default_shard_id(name)):
-            # the function had been migrated: drop its durable override too
+        if ((self.rebalance_enabled or self.fn_split_enabled)
+                and k is not None
+                and (type(k) is not int or k != self._default_shard_id(name))):
+            # the function had been migrated or split: drop its durable
+            # override too
             yield from self.store.write(f"shardmap/{name}", None)
         if st:
             for sb in list(st.sandboxes.values()):
@@ -363,7 +484,7 @@ class ControlPlane:
         st = self.functions.get(fn)
         if st is None:
             return
-        sb = st.sandboxes.pop(sandbox_id, None)
+        sb = st.drop_sandbox(sandbox_id)
         if sb is None:
             return
         self.placer.release(sb.worker_id,
@@ -405,12 +526,23 @@ class ControlPlane:
         while True:
             yield self.env.timeout(self.costs.autoscale_period)
             for fn, st in list(shard.functions.items()):
-                yield from self._reconcile_function(fn, st)
+                yield from self._reconcile_function(fn, st,
+                                                    shard_id=shard.shard_id)
 
-    def _reconcile_function(self, fn: str, st: FunctionState) -> Generator:
-        """Compute desired scale and act on the difference."""
+    def _reconcile_function(self, fn: str, st: FunctionState,
+                            shard_id: Optional[int] = None) -> Generator:
+        """Compute desired scale and act on the difference.
+
+        ``shard_id`` is the calling subshard's context (a shard's autoscale
+        loop or eviction fan-out); ``None`` means a global caller (urgent
+        metric push, dead-sandbox reconcile). Sole owners ignore it; a split
+        function acts only on the calling subshard's slice — or on every
+        slice for a global caller."""
         yield self.env.timeout(self.costs.cp_sched_cpu)
         self.collector.reconciles += 1
+        if st.slices is not None:
+            yield from self._reconcile_split(fn, st, shard_id)
+            return
         current = st.ready_count + st.creating
         desired = st.autoscaler.desired(self.env.now, current)
         if self.env.now < self.no_downscale_until:
@@ -425,9 +557,96 @@ class ControlPlane:
             for sb in victims:
                 yield from self._teardown_sandbox(st, sb)
 
+    # -- split-function scaling (shard-set ownership) ------------------------------------
+    def _split_current(self, st: FunctionState) -> int:
+        """Coherent *global* replica count of a split function: every ready
+        sandbox (the global map is authoritative) plus in-flight creations —
+        per slice, plus any ``st.creating`` leftovers spawned while the
+        function was a sole owner (they complete against the global state
+        and get adopted into a slice on readiness)."""
+        return (st.ready_count + st.creating
+                + sum(sl.creating for sl in st.slices.values()))
+
+    def _split_targets(self, st: FunctionState) -> None:
+        """Recompute per-slice desired shares, at most once per instant.
+
+        One autoscaler state machine serves the whole shard-set: the global
+        desired count is computed against the merged replica count (so the
+        KPA panic/scale-to-zero logic behaves exactly as for a sole owner)
+        and divided into per-slice targets by deterministic round-robin
+        residual assignment (``autoscaler.split_shares``); the cursor
+        advances by the residual so no subshard permanently carries it.
+        Recomputed only by the home subshard's reconcile or a global caller
+        — non-home subshards act on their stored target (at most one
+        autoscale period stale), which keeps concurrent subshard loops from
+        re-deciding the same tick against each other."""
+        now = self.env.now
+        if st.targets_t == now:
+            return
+        st.targets_t = now
+        slices = st.slices
+        current = self._split_current(st)
+        desired = st.autoscaler.desired(now, current)
+        if now < self.no_downscale_until:
+            desired = max(desired, current)     # post-recovery hold (§3.4.1)
+        order = sorted(slices)
+        shares = split_shares(desired, len(order), st.rr_cursor)
+        for i, sid in enumerate(order):
+            slices[sid].target = shares[i]
+        r = desired % len(order)
+        if r:
+            st.rr_cursor = (st.rr_cursor + r) % len(order)
+
+    def _reconcile_split(self, fn: str, st: FunctionState,
+                         shard_id: Optional[int]) -> Generator:
+        home = self._fn_shard_id(fn)
+        if shard_id is None or shard_id == home:
+            self._split_targets(st)
+        if shard_id is not None:
+            sl = st.slices.get(shard_id)
+            acts = [sl] if sl is not None else []
+        else:
+            acts = [st.slices[k] for k in sorted(st.slices)]
+        desired = sum(s.target for s in st.slices.values())
+        for sl in acts:
+            if st.slices is None or st.slices.get(sl.shard_id) is not sl:
+                # the shard-set merged (or re-formed) while a teardown below
+                # yielded — the remaining slices no longer exist; the sole-
+                # owner path (or the new slices' own reconciles) takes over
+                return
+            current = st.slice_ready(sl) + sl.creating
+            if sl.target > current:
+                # cap at the global shortfall: residual rotation between
+                # recomputes must not inflate the total replica count
+                n = min(sl.target - current,
+                        max(0, desired - self._split_current(st)))
+                for _ in range(n):
+                    sl.creating += 1
+                    self.env.process(
+                        self._create_sandbox(st, slice_id=sl.shard_id),
+                        name=f"create-{fn}")
+            elif sl.target < current:
+                # symmetric cap: only shed true global excess, so a rotated
+                # residual never tears down a replica another slice is
+                # creating back
+                n = min(current - sl.target,
+                        max(0, self._split_current(st) - desired))
+                for sb in self._pick_slice_victims(st, sl, n):
+                    yield from self._teardown_sandbox(st, sb)
+
     def _pick_victims(self, st: FunctionState, n: int) -> List[Sandbox]:
         ready = [s for s in st.sandboxes.values()
                  if s.state == SandboxState.READY]
+        ready.sort(key=lambda s: -s.sandbox_id)    # newest first
+        return ready[:n]
+
+    def _pick_slice_victims(self, st: FunctionState, sl: FunctionSlice,
+                            n: int) -> List[Sandbox]:
+        if n <= 0:
+            return []
+        ready = [st.sandboxes[sid] for sid in sl.sandbox_ids
+                 if sid in st.sandboxes
+                 and st.sandboxes[sid].state == SandboxState.READY]
         ready.sort(key=lambda s: -s.sandbox_id)    # newest first
         return ready[:n]
 
@@ -473,11 +692,30 @@ class ControlPlane:
                 self.env.now + self.costs.cp_steal_backoff
         return None
 
-    def _create_sandbox(self, st: FunctionState) -> Generator:
+    def _live_slice(self, st: FunctionState, slice_id: Optional[int],
+                    sl: Optional[FunctionSlice]) -> bool:
+        """Is ``sl`` still the live slice for ``slice_id``? False once the
+        shard-set merged (or re-split: a new object under the same id)."""
+        return (sl is not None and st.slices is not None
+                and st.slices.get(slice_id) is sl)
+
+    def _create_sandbox(self, st: FunctionState,
+                        slice_id: Optional[int] = None) -> Generator:
         fn = st.function
+        # slice context: a creation spawned for a split function runs against
+        # its subshard's lock/partition. If the split dissolved before we got
+        # scheduled, fall back to the sole-owner path (the merge already
+        # folded our CREATING count into st.creating).
+        sl = (st.slices.get(slice_id)
+              if slice_id is not None and st.slices is not None else None)
+        if sl is None:
+            slice_id = None
         # rebalancer heat: one creation = one scale-lock hold charged to the
-        # owning shard on this function's behalf (decayed each rebalance tick)
-        st.heat += 1.0
+        # owning (sub)shard on this function's behalf (decayed each tick)
+        if sl is None:
+            st.heat += 1.0
+        else:
+            sl.heat += 1.0
         try:
             # the shard's slice of the autoscaling/cluster-state structures
             # (C1 bottleneck; global when cp_shards == 1). A migration
@@ -486,12 +724,20 @@ class ControlPlane:
             # its new shard, so a creation never runs against a slice the
             # function left (once we hold the current owner's lock, a
             # further move is impossible: the handoff needs this lock too).
+            # A split creation re-checks its slice instead: a merge handoff
+            # needs every subshard lock, so holding ours pins the slice.
             while True:
-                shard = self._fn_shard(fn.name)
+                if sl is not None and not self._live_slice(st, slice_id, sl):
+                    sl, slice_id = None, None   # merged away while queued
+                shard = (self.shards[slice_id] if sl is not None
+                         else self._fn_shard(fn.name))
                 t0 = self.env.now
                 yield shard.scale_lock.acquire()
                 shard.lock_wait_s += self.env.now - t0
-                if self._fn_shard(fn.name) is shard:
+                if sl is not None:
+                    if self._live_slice(st, slice_id, sl):
+                        break
+                elif self._fn_shard(fn.name) is shard:
                     break
                 shard.scale_lock.release()
             try:
@@ -509,6 +755,8 @@ class ControlPlane:
                 ip=self.workers[wid].ip, port=fn.port, worker_id=wid,
             )
             st.sandboxes[sb.sandbox_id] = sb
+            if sl is not None and self._live_slice(st, slice_id, sl):
+                sl.sandbox_ids.add(sb.sandbox_id)
 
             if self.persist_sandbox_state:
                 # ABLATION: durable write on the critical path (paper §5.2.1
@@ -521,7 +769,7 @@ class ControlPlane:
                 yield self.env.process(worker.create_sandbox(sb),
                                        name=f"boot-{sb.key}")
             except (RuntimeError, Interrupt):
-                st.sandboxes.pop(sb.sandbox_id, None)
+                st.drop_sandbox(sb.sandbox_id)
                 self.placer.release(wid, fn.scaling.cpu_req_millis,
                                     fn.scaling.mem_req_mb)
                 return
@@ -530,35 +778,67 @@ class ControlPlane:
                 # leadership lost while the worker booted: this replica's
                 # in-memory view is dead weight — undo the placement commit
                 # and drop the CREATING record so capacity stays exact
-                st.sandboxes.pop(sb.sandbox_id, None)
+                st.drop_sandbox(sb.sandbox_id)
                 self.placer.release(wid, fn.scaling.cpu_req_millis,
                                     fn.scaling.mem_req_mb)
                 return
             sb.state = SandboxState.READY
+            if (st.slices is not None
+                    and not self._live_slice(st, slice_id, sl)
+                    and st.slice_of(sb.sandbox_id) is None):
+                # a sole-owner leftover (or a creation whose slice dissolved
+                # and re-split) finishing against a split function: adopt it
+                # into a slice so per-slice accounting stays coherent —
+                # unless a split handoff that ran mid-boot already
+                # partitioned this (then-CREATING) sandbox into a slice
+                self._adopt_sandbox(st, sb)
             self.collector.sandbox_creations += 1
             self.collector.event(self.env.now, "sandbox-created", fn.name)
             # in-memory state update; the endpoint rides the next coalesced
             # broadcast (one batched grpc_call for all DPs and all updates
             # queued this turn on this shard)
             yield self.env.timeout(self.costs.channel_op)
-            self._queue_endpoint_update("add", fn.name, sb)
+            # a split creation's endpoint flushes through the subshard that
+            # created it (exactly-once per subshard); sole owners keep the
+            # owning-shard routing
+            self._queue_endpoint_update(
+                "add", fn.name, sb,
+                shard=shard if sl is not None else None)
         finally:
-            st.creating = max(0, st.creating - 1)
+            if self._live_slice(st, slice_id, sl):
+                sl.creating = max(0, sl.creating - 1)
+            else:
+                st.creating = max(0, st.creating - 1)
+
+    def _adopt_sandbox(self, st: FunctionState, sb: Sandbox) -> None:
+        """Attach an unowned sandbox of a split function to a slice: the
+        subshard whose worker partition hosts it, else the home subshard."""
+        sl = st.slices.get(sb.worker_id % self.cp_shards)
+        if sl is None:
+            sl = st.slices[self._fn_shard_id(st.function.name)]
+        sl.sandbox_ids.add(sb.sandbox_id)
 
     def _teardown_sandbox(self, st: FunctionState, sb: Sandbox) -> Generator:
         # teardown runs in the asynchronous autoscaling loop, off the
         # latency-critical path (paper §4 "Sandbox teardown") — it does not
         # contend the scale lock
         yield self.env.timeout(self.costs.channel_op)
+        owner_slice = st.slice_of(sb.sandbox_id)   # before the drop
         if st.sandboxes.pop(sb.sandbox_id, None) is None:
             # a concurrent remover (dead-sandbox report, worker eviction,
             # another reconcile) already took it: releasing again would
             # free phantom capacity and overcommit the node
             return
+        if owner_slice is not None:
+            owner_slice.sandbox_ids.discard(sb.sandbox_id)
         sb.state = SandboxState.TERMINATING
         if self.persist_sandbox_state:
             yield from self.store.write(f"sandbox/{sb.key}", None)
-        self._queue_endpoint_update("remove", st.function.name, sb.sandbox_id)
+        # a split replica's removal rides its owning subshard's flush queue
+        self._queue_endpoint_update(
+            "remove", st.function.name, sb.sandbox_id,
+            shard=(self.shards[owner_slice.shard_id]
+                   if owner_slice is not None else None))
         worker = self.cluster.worker_by_id(sb.worker_id)
         if worker is not None:
             # drain grace: in-flight requests already dispatched to this
@@ -575,11 +855,16 @@ class ControlPlane:
 
     # -- CP -> DP endpoint propagation (coalesced, per shard) -------------------------------------
     def _queue_endpoint_update(self, op: str, fn: str, payload,
-                               drain: bool = True) -> None:
-        """Buffer an endpoint add/remove on the function's owning shard;
-        every update queued on that shard in the same event-loop turn shares
-        one batched broadcast to all DPs."""
-        shard = self._fn_shard(fn)
+                               drain: bool = True,
+                               shard: Optional[ControlPlaneShard] = None,
+                               ) -> None:
+        """Buffer an endpoint add/remove on the function's owning shard —
+        or, for a split function's replicas, on the subshard passed by the
+        caller (each subshard flushes its own creations/teardowns exactly
+        once); every update queued on a shard in the same event-loop turn
+        shares one batched broadcast to all DPs."""
+        if shard is None:
+            shard = self._fn_shard(fn)
         shard.ep_updates.append((op, fn, payload, drain))
         self._schedule_ep_flush(shard)
 
@@ -641,19 +926,32 @@ class ControlPlane:
         affected: List[tuple] = []
         for fn, st in self.functions.items():
             for sb in [s for s in st.sandboxes.values() if s.worker_id == wid]:
+                owner_slice = st.slice_of(sb.sandbox_id)
                 st.sandboxes.pop(sb.sandbox_id, None)
-                affected.append((fn, sb.sandbox_id))
+                if owner_slice is not None:
+                    owner_slice.sandbox_ids.discard(sb.sandbox_id)
+                affected.append((fn, sb.sandbox_id,
+                                 None if owner_slice is None
+                                 else owner_slice.shard_id))
         foreign: Dict[int, List[str]] = {}
-        for fn, sid in affected:
-            self._queue_endpoint_update("remove", fn, sid, drain=False)
-            owner = self._fn_shard(fn)
+        for fn, sid, slice_shard in affected:
+            # a split function's lost replica is the owning *subshard's* to
+            # handle — its endpoint removal rides that slice's flush queue,
+            # and the reconcile fan-out targets the slice, not just the home
+            owner = (self.shards[slice_shard] if slice_shard is not None
+                     else self._fn_shard(fn))
+            self._queue_endpoint_update(
+                "remove", fn, sid, drain=False,
+                shard=self.shards[slice_shard] if slice_shard is not None
+                else None)
             if owner is not shard and fn not in foreign.get(owner.shard_id, ()):
                 foreign.setdefault(owner.shard_id, []).append(fn)
         self.collector.event(self.env.now, "worker-evicted", wid)
         # re-run autoscaling promptly to replace lost capacity: own functions
         # inline in the health loop (pre-shard behavior when cp_shards == 1)...
         for fn, st in list(shard.functions.items()):
-            yield from self._reconcile_function(fn, st)
+            yield from self._reconcile_function(fn, st,
+                                                shard_id=shard.shard_id)
         # ...affected foreign-owned functions (cross-shard capacity spills)
         # via explicit targeted fan-out; everything else is covered by each
         # shard's own autoscale loop
@@ -674,7 +972,8 @@ class ControlPlane:
             # must not keep scaling sandboxes on the shared workers
             if not (self.alive and self.is_leader):
                 return
-            yield from self._reconcile_function(fn, st)
+            yield from self._reconcile_function(fn, st,
+                                                shard_id=shard.shard_id)
 
     def restore_worker(self, wid: int) -> None:
         self._worker_shard(wid).worker_last_hb[wid] = self.env.now
@@ -698,6 +997,12 @@ class ControlPlane:
             if self._migration_inflight:
                 self._decay_heat()
                 continue
+            # merge escalation first: a split function whose heat decayed
+            # away folds back to its home shard regardless of the hot/cold
+            # gates below (a cooled cluster never trips them)
+            if self.fn_split_enabled and self._maybe_merge():
+                self._decay_heat()
+                continue
             # the load EWMA itself is maintained by each shard's health loop
             loads = [(self.shard_load(s), s.shard_id) for s in self.shards]
             hot_load, hot_id = max(loads, key=lambda x: (x[0], -x[1]))
@@ -707,41 +1012,77 @@ class ControlPlane:
                 self._decay_heat()
                 continue
             hot = self.shards[hot_id]
-            total_heat = sum(st.heat for st in hot.functions.values())
+            total_heat = sum(self._shard_fn_heat(st, hot_id)
+                             for st in hot.functions.values())
             # second gate, in *heat* (creation-count) terms: lock wait is
             # superlinear near saturation, so the wait ratio alone can trip
             # on a small real load gap (classic with 2 shards) and migration
             # then just ping-pongs the hotspot. Heat is linear in load —
             # require the same factor there before moving anything.
-            cold_heat = sum(st.heat for st in
-                            self.shards[cold_id].functions.values())
+            cold_heat = sum(self._shard_fn_heat(st, cold_id)
+                            for st in self.shards[cold_id].functions.values())
             if total_heat <= self.rebalance_hot_factor * cold_heat:
                 self._decay_heat()
                 continue
             names: List[str] = []
+            split_name: Optional[str] = None
+            moved_heat = 0.0
             if total_heat > 0.0:
-                # move hottest-first, but only functions whose projected load
-                # share still closes the hot-cold gap — moving a function
-                # whose share exceeds the remaining gap would just relocate
-                # (or invert) the hotspot instead of spreading it
                 gap = hot_load - cold_load
-                movers = sorted(hot.functions.items(),
-                                key=lambda kv: (-kv[1].heat, kv[0]))
+                movers = sorted(
+                    ((name, st) for name, st in hot.functions.items()
+                     if st.slices is None),   # split fns are already spread
+                    key=lambda kv: (-kv[1].heat, kv[0]))
                 now = self.env.now
-                moved_heat = 0.0
-                for name, st in movers:
-                    if len(names) >= self.rebalance_max_moves or st.heat <= 0:
-                        break
-                    if now < st.cooldown_until:
-                        continue
-                    fn_load = hot_load * st.heat / total_heat
-                    if fn_load >= gap:
-                        continue
-                    names.append(name)
-                    moved_heat += st.heat
-                    gap -= 2.0 * fn_load
+                # split escalation: when the hot shard's heat is dominated
+                # by its single hottest function, no whole-function move
+                # fixes the convoy — either the projected share exceeds the
+                # hot-cold gap outright (moving it inverts the hotspot), or
+                # it holds the majority of the shard's heat (moving it to an
+                # idle shard merely *relocates* ~all the load and the pair
+                # ping-pongs on the cooldown). Split it across a shard-set
+                # instead, and skip whole moves this tick: the dominant
+                # function IS the imbalance.
+                if self.fn_split_enabled and movers:
+                    name0, st0 = movers[0]
+                    fn_load0 = hot_load * st0.heat / total_heat
+                    if (st0.heat > 0.0 and now >= st0.split_cooldown_until
+                            and (fn_load0 >= gap
+                                 or st0.heat >= 0.5 * total_heat)):
+                        split_name = name0
+                if split_name is None:
+                    # move hottest-first, but only functions whose projected
+                    # load share still closes the hot-cold gap — moving a
+                    # function whose share exceeds the remaining gap would
+                    # just relocate (or invert) the hotspot
+                    for name, st in movers:
+                        if (len(names) >= self.rebalance_max_moves
+                                or st.heat <= 0):
+                            break
+                        if now < st.cooldown_until:
+                            continue
+                        fn_load = hot_load * st.heat / total_heat
+                        if fn_load >= gap:
+                            continue
+                        names.append(name)
+                        moved_heat += st.heat
+                        gap -= 2.0 * fn_load
             self._decay_heat()
-            if names:
+            if split_name is not None:
+                # second escalation: the hot shard's load is dominated by
+                # one function no whole move can fix — split it across its
+                # home plus the coldest (k-1) sibling shards
+                k = min(self.fn_split_max_shards, self.cp_shards)
+                others = sorted((ld, sid) for ld, sid in loads
+                                if sid != hot_id)
+                shard_ids = ((hot_id,)
+                             + tuple(sid for _, sid in others[:k - 1]))
+                if len(shard_ids) >= 2:
+                    self._migration_inflight = True
+                    self.env.process(
+                        self._split_function(split_name, shard_ids),
+                        name=f"cp{self.cp_id}-split-{split_name}")
+            elif self.rebalance_enabled and names:
                 self._migration_inflight = True
                 self.env.process(
                     self._migrate_functions(
@@ -749,10 +1090,23 @@ class ControlPlane:
                         ema_delta=hot.load_ema * moved_heat / total_heat),
                     name=f"cp{self.cp_id}-migrate-{hot_id}-{cold_id}")
 
+    def _shard_fn_heat(self, st: FunctionState, shard_id: int) -> float:
+        """Creation heat ``st`` charges shard ``shard_id``: the slice's heat
+        for a split function (its global heat is spread over the set)."""
+        if st.slices is not None:
+            sl = st.slices.get(shard_id)
+            return sl.heat if sl is not None else 0.0
+        return st.heat
+
     def _decay_heat(self) -> None:
         for shard in self.shards:
             for st in shard.functions.values():
-                st.heat *= 0.5
+                if st.slices is not None:
+                    sl = st.slices.get(shard.shard_id)
+                    if sl is not None:
+                        sl.heat *= 0.5
+                else:
+                    st.heat *= 0.5
 
     def _migrate_functions(self, src: ControlPlaneShard,
                            dst: ControlPlaneShard,
@@ -786,9 +1140,12 @@ class ControlPlane:
                 if not (self.alive and self.is_leader):
                     return
                 for name in names:
-                    st = src.functions.pop(name, None)
-                    if st is None:       # deregistered/moved since selection
+                    st = src.functions.get(name)
+                    if st is None or st.slices is not None:
+                        # deregistered/moved since selection — or split into
+                        # a shard-set, which only the merge handoff may undo
                         continue
+                    src.functions.pop(name)
                     dst.functions[name] = st
                     self.fn_shard_table[name] = dst.shard_id
                     st.cooldown_until = (self.env.now
@@ -838,6 +1195,158 @@ class ControlPlane:
         finally:
             self._migration_inflight = False
 
+    # -- per-function creation sharding (split / merge handoffs) ------------------------------
+    def _maybe_merge(self) -> bool:
+        """Fold one cooled-down split function per tick. Merge when the
+        shard-set's summed slice heat decays below ``cp_fn_split_min_load``
+        and the split cooldown elapsed (hysteresis against flap)."""
+        now = self.env.now
+        for name in sorted(self._split_fns):
+            st = self.functions.get(name)
+            if st is None or st.slices is None:
+                self._split_fns.discard(name)
+                return False          # stale entry reaped; retry next tick
+            if now < st.split_cooldown_until:
+                continue
+            if (sum(sl.heat for sl in st.slices.values())
+                    >= self.fn_split_min_load):
+                continue
+            self._migration_inflight = True
+            self.env.process(self._merge_function(name),
+                             name=f"cp{self.cp_id}-merge-{name}")
+            return True
+        return False
+
+    def _split_function(self, name: str,
+                        shard_ids: Tuple[int, ...]) -> Generator:
+        """Split handoff, the migration handoff generalized to a shard-set:
+        quiesce *every* member shard's scale lock (in id order — concurrent
+        handoffs cannot deadlock) → slice the ``FunctionState`` (existing
+        sandboxes round-robin across the set, heat spread evenly, slice
+        targets seeded to current ownership so nothing churns before the
+        next autoscale decision) → publish the tuple in the indirection
+        table and register the function with every member shard → persist
+        the ``shardmap/<fn>`` shard-set override off the critical path.
+        ``shard_ids`` is home-first. A deposed leader aborts without
+        touching shared state."""
+        try:
+            if not (self.alive and self.is_leader):
+                return
+            members = [self.shards[k] for k in sorted(shard_ids)]
+            for sh in members:
+                t0 = self.env.now
+                yield sh.scale_lock.acquire()
+                sh.lock_wait_s += self.env.now - t0
+            try:
+                # one cross-shard hop per subshard recruited
+                yield self.env.timeout(
+                    self.costs.cp_cross_shard_op * (len(shard_ids) - 1))
+                if not (self.alive and self.is_leader):
+                    return
+                st = self.functions.get(name)
+                if (st is None or st.slices is not None
+                        or self._fn_shard_id(name) != shard_ids[0]):
+                    return            # deregistered/moved/split since selection
+                slices = {k: FunctionSlice(shard_id=k) for k in shard_ids}
+                order = sorted(shard_ids)
+                for i, sid in enumerate(sorted(st.sandboxes)):
+                    slices[order[i % len(order)]].sandbox_ids.add(sid)
+                for sl in slices.values():
+                    sl.target = len(sl.sandbox_ids)
+                    sl.heat = st.heat / len(shard_ids)
+                st.heat = 0.0
+                st.rr_cursor = 0
+                st.targets_t = -1.0
+                st.slices = slices
+                st.split_cooldown_until = (self.env.now
+                                           + self.fn_split_cooldown)
+                for k in shard_ids:
+                    self.shards[k].functions[name] = st
+                self.fn_shard_table[name] = tuple(shard_ids)
+                self._split_fns.add(name)
+                self.collector.fn_splits += 1
+                self.collector.event(self.env.now, "fn-split",
+                                     (name, tuple(shard_ids)))
+            finally:
+                for sh in reversed(members):
+                    sh.scale_lock.release()
+            # durable shard-set override, off the critical path; skipped if
+            # the function vanished (or merged back) while we persisted
+            if not (self.alive and self.is_leader):
+                return
+            st = self.functions.get(name)
+            if st is None or st.slices is None:
+                return
+            value = ",".join(str(k) for k in shard_ids).encode()
+            yield from self.store.write(f"shardmap/{name}", value)
+        finally:
+            self._migration_inflight = False
+
+    def _merge_function(self, name: str) -> Generator:
+        """Merge handoff: quiesce every subshard lock (id order) → fold the
+        slices back into the global ``FunctionState`` (creating counts and
+        heat sum; the sandbox map was global all along) → pending
+        endpoint-flush entries still queued on non-home subshards move to
+        the home queue exactly once → repoint the table to the home shard →
+        persist the override (tombstoned when home is the hash default)."""
+        try:
+            if not (self.alive and self.is_leader):
+                return
+            st = self.functions.get(name)
+            if st is None or st.slices is None:
+                return
+            home = self._fn_shard_id(name)
+            member_ids = sorted(st.slices)
+            members = [self.shards[k] for k in member_ids]
+            for sh in members:
+                t0 = self.env.now
+                yield sh.scale_lock.acquire()
+                sh.lock_wait_s += self.env.now - t0
+            try:
+                yield self.env.timeout(
+                    self.costs.cp_cross_shard_op * (len(member_ids) - 1))
+                if not (self.alive and self.is_leader):
+                    return
+                st = self.functions.get(name)
+                if st is None or st.slices is None:
+                    return            # deregistered/merged since selection
+                st.creating += sum(sl.creating for sl in st.slices.values())
+                st.heat += sum(sl.heat for sl in st.slices.values())
+                st.slices = None
+                st.split_cooldown_until = (self.env.now
+                                           + self.fn_split_cooldown)
+                survivor = self.shards[home]
+                carried: List[tuple] = []
+                for k in member_ids:
+                    if k == home:
+                        continue
+                    sh = self.shards[k]
+                    sh.functions.pop(name, None)
+                    mine = [u for u in sh.ep_updates if u[1] == name]
+                    if mine:
+                        sh.ep_updates = deque(u for u in sh.ep_updates
+                                              if u[1] != name)
+                        carried.extend(mine)
+                if carried:
+                    survivor.ep_updates.extend(carried)
+                    self._schedule_ep_flush(survivor)
+                self.fn_shard_table[name] = home
+                self._split_fns.discard(name)
+                self.collector.fn_merges += 1
+                self.collector.event(self.env.now, "fn-merged", (name, home))
+            finally:
+                for sh in reversed(members):
+                    sh.scale_lock.release()
+            if not (self.alive and self.is_leader):
+                return
+            if name not in self.functions:
+                return
+            value = (None if home == self._default_shard_id(name)
+                     else str(home).encode())
+            yield from self.store.write(f"shardmap/{name}", value)
+        finally:
+            self._migration_inflight = False
+
     # -- failover recovery (new leader) ----------------------------------------------------------
     def recover_as_leader(self) -> Generator:
         """Paper §3.4.1: fetch persisted records, reconnect, reconstruct
@@ -852,21 +1361,56 @@ class ControlPlane:
         worker_records = yield from self.store.read_prefix("worker/")
         self.functions = {}
         self.fn_shard_table = {}
+        self._split_fns = set()
         for shard in self.shards:
             shard.functions = {}
             shard.worker_last_hb = {}
         for key, rec in func_records.items():
             self.install_function(Function.from_record(rec))
-        if self.rebalance_enabled:
+        if self.rebalance_enabled or self.fn_split_enabled:
             shardmap = yield from self.store.read_prefix("shardmap/")
             for key, rec in shardmap.items():
                 name = key.split("/", 1)[1]
                 st = self.functions.get(name)
-                try:
-                    dst = int(rec.decode())
-                except (ValueError, AttributeError):
+                if st is None:
                     continue
-                if st is None or not 0 <= dst < self.cp_shards:
+                try:
+                    text = rec.decode()
+                except AttributeError:
+                    continue
+                if "," in text:
+                    # shard-set override: the function was split — rebuild
+                    # the slices (empty; sandboxes are adopted as the
+                    # workers push them back) so failover keeps the split
+                    try:
+                        ids = tuple(int(x) for x in text.split(","))
+                    except ValueError:
+                        continue
+                    if (len(ids) < 2 or len(set(ids)) != len(ids)
+                            or not all(0 <= k < self.cp_shards
+                                       for k in ids)):
+                        continue
+                    cur = self._fn_shard_id(name)
+                    self.shards[cur].functions.pop(name, None)
+                    st.slices = {k: FunctionSlice(shard_id=k) for k in ids}
+                    st.rr_cursor = 0
+                    st.targets_t = -1.0
+                    # slices replay with zero heat (real creations refill
+                    # it); without the cooldown the first rebalance tick
+                    # would merge the split right back — failover must KEEP
+                    # splits, with the same hysteresis a fresh split gets
+                    st.split_cooldown_until = (self.env.now
+                                               + self.fn_split_cooldown)
+                    for k in ids:
+                        self.shards[k].functions[name] = st
+                    self.fn_shard_table[name] = ids
+                    self._split_fns.add(name)
+                    continue
+                try:
+                    dst = int(text)
+                except ValueError:
+                    continue
+                if not 0 <= dst < self.cp_shards:
                     continue
                 cur = self._fn_shard_id(name)
                 if dst != cur:
@@ -905,6 +1449,10 @@ class ControlPlane:
             if st is None:
                 continue
             st.sandboxes[sb.sandbox_id] = sb
+            if st.slices is not None:
+                # replayed shard-set override: attach the recovered replica
+                # to its subshard so per-slice accounting is coherent
+                self._adopt_sandbox(st, sb)
             self.placer.commit(wid, st.function.scaling.cpu_req_millis,
                                st.function.scaling.mem_req_mb)
             self._queue_endpoint_update("add", sb.function_name, sb)

@@ -112,6 +112,31 @@ class DirigentCosts:
     #                                    saturated cluster degrades to the
     #                                    deterministic round-robin probe
 
+    # -- per-function creation sharding (cp_fn_split_*) ----------------------
+    # Escalation past whole-function rebalancing: one function whose creation
+    # load alone exceeds the hot-cold gap cannot be *moved* anywhere useful —
+    # it saturates whichever single scale lock owns it. With
+    # ``Cluster(cp_fn_split_enabled=True)`` the rebalancer instead *splits*
+    # such a function across a shard-set: per-subshard FunctionState slices,
+    # each creating on its own scale lock and worker partition (the
+    # Archipelago per-service semi-global partitioning idea applied to one
+    # function). No paper anchor; operator guidance in docs/operations.md.
+    cp_fn_split_max_shards: int = 4    # ceiling on a shard-set's size: each
+    #                                    extra subshard adds an autoscale
+    #                                    reconcile + a quiesce participant
+    cp_fn_split_min_load: float = 4.0  # merge threshold, in heat units
+    #                                    (creations charged to the slices,
+    #                                    halved each rebalance tick): when a
+    #                                    split function's summed slice heat
+    #                                    decays below this, it folds back to
+    #                                    its home shard
+    cp_fn_split_cooldown: float = 10.0  # hysteresis on both edges: a freshly
+    #                                    split function stays split at least
+    #                                    this long, and a freshly merged one
+    #                                    cannot re-split before it elapses —
+    #                                    bounds split/merge flapping on a
+    #                                    bursty function
+
     # -- persistence (Redis, AOF fsync always) -------------------------------
     persist_write: float = 0.85e-3     # fsync'd append median (C3 ablation:
     #                                    caps at ~1000 creations/s when sandbox

@@ -13,6 +13,17 @@ One process-level component owning, for every function steered to it:
 The front-end LB steers invocations by function-ID hash, so all invocations
 of a function land on one DP replica and in-flight accounting is centralized.
 
+Endpoint updates arrive from the control plane per *CP shard* flush queue —
+and, for a function split across a CP shard-set (``cp_fn_split_enabled``),
+from **multiple owning subshards concurrently**: each subshard broadcasts
+exactly the adds/removes for the replicas it created or tore down, exactly
+once, so a function's endpoint table here is the union of its subshards'
+flushes. Nothing in the DP keys on the sending shard — endpoints are keyed
+by sandbox id, adds are idempotent, removes of unknown ids are no-ops — so
+the DP is oblivious to splits and merges by construction (the CP's merge
+handoff moves still-pending flush entries between queues rather than
+re-sending them, preserving exactly-once; tests/test_fn_split.py pins it).
+
 Mechanism → paper section map (claim ids C1..C12 as in costmodel.py):
 
   * ``handle`` / ``_dispatch`` — §3.3 warm path: LB hop → DP proxy CPU

@@ -33,6 +33,8 @@ class Collector:
     sandbox_teardowns: int = 0
     reconciles: int = 0        # autoscale/reconcile decisions taken by the CP
     fn_migrations: int = 0     # functions moved between CP shards (rebalancer)
+    fn_splits: int = 0         # functions split across a CP shard-set
+    fn_merges: int = 0         # split functions folded back to a sole owner
     steal_probes: int = 0      # cross-shard capacity probes paid (spill path)
     steals: int = 0            # placements satisfied by a foreign shard
 

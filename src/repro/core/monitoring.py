@@ -30,6 +30,10 @@ def render_metrics(cluster: "Cluster") -> str:
     lines.append(f"dirigent_cp_reconciles_total {c.reconciles}")
     lines.append("# TYPE dirigent_cp_fn_migrations_total counter")
     lines.append(f"dirigent_cp_fn_migrations_total {c.fn_migrations}")
+    lines.append("# TYPE dirigent_cp_fn_splits_total counter")
+    lines.append(f"dirigent_cp_fn_splits_total {c.fn_splits}")
+    lines.append("# TYPE dirigent_cp_fn_merges_total counter")
+    lines.append(f"dirigent_cp_fn_merges_total {c.fn_merges}")
     lines.append("# TYPE dirigent_cp_steals_total counter")
     lines.append(f"dirigent_cp_steals_total {c.steals}")
     lines.append("# TYPE dirigent_cp_steal_probes_total counter")
@@ -63,6 +67,24 @@ def render_metrics(cluster: "Cluster") -> str:
             for shard in leader.shards:
                 lines.append(f"{family}{{shard=\"{shard.shard_id}\"}} "
                              f"{value(shard)}")
+        # per-subshard load of split functions (shard-set ownership): how a
+        # split function's replicas/creations/heat spread over its set
+        split = [(n, st) for n, st in sorted(leader.functions.items())
+                 if st.slices is not None]
+        if split:
+            lines.append("# TYPE dirigent_cp_fn_slice_sandboxes gauge")
+            lines.append("# TYPE dirigent_cp_fn_slice_creating gauge")
+            lines.append("# TYPE dirigent_cp_fn_slice_heat gauge")
+            for name, st in split:
+                for k in sorted(st.slices):
+                    sl = st.slices[k]
+                    tags = f"{{function=\"{name}\",shard=\"{k}\"}}"
+                    lines.append(f"dirigent_cp_fn_slice_sandboxes{tags} "
+                                 f"{len(sl.sandbox_ids)}")
+                    lines.append(f"dirigent_cp_fn_slice_creating{tags} "
+                                 f"{sl.creating}")
+                    lines.append(f"dirigent_cp_fn_slice_heat{tags} "
+                                 f"{sl.heat:.3f}")
         lines.append("# TYPE dirigent_function_ready_sandboxes gauge")
         for name, st in sorted(leader.functions.items()):
             lines.append(f"dirigent_function_ready_sandboxes"

@@ -29,6 +29,13 @@ is full, the CP's capacity spill (``ControlPlane._place``) probes the other
 *not* through the parent entry point. The parent ``place()`` round-robin
 entry point remains for single-domain callers
 (``placement_policy="partitioned"`` with an unsharded CP).
+
+A function *split* across a CP shard-set (``cp_fn_split_enabled``) needs no
+new placer machinery: each subshard's creations call ``_place`` with that
+subshard's context, scoring ``shards[k]`` — its own worker partition — so a
+split function's replicas spread over the partitions of every subshard in
+its set, and each subshard's spill steals independently. The placer still
+sees one opaque stream of (cpu, mem) requests per shard.
 """
 from __future__ import annotations
 

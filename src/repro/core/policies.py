@@ -15,7 +15,7 @@ relevant Go interfaces" — this module is that interface surface, in Python:
     the 5000-worker regime — a placer structure, not a scoring function; see
     core/placement.py).
 
-Two sharding knobs exist and they are different layers:
+Three sharding knobs exist and they are different layers:
 
   * ``placement_policy="partitioned"`` shards only the placer's *score
     index* (a data-structure optimization inside one scheduling domain);
@@ -27,7 +27,13 @@ Two sharding knobs exist and they are different layers:
     partition is full, the spill steals capacity from the least-loaded
     foreign shard (with backoff) rather than probing round-robin, and
     ``Cluster(cp_rebalance_enabled=True)`` additionally migrates hot
-    functions off overloaded shards (docs/operations.md).
+    functions off overloaded shards (docs/operations.md);
+  * ``Cluster(cp_fn_split_enabled=True)`` shards *individual hot functions*:
+    when one function's creation load dominates a shard (no whole-function
+    move fixes that), its ownership escalates from one shard to a shard-set
+    — per-subshard state slices, each creating under its own scale lock on
+    its own placer partition — and folds back when the heat decays
+    (core/control_plane.py ``FunctionSlice``; docs/operations.md).
 
 Benchmarks keep the Knative-default policies for paper fidelity; the
 policies here are selectable via ``Cluster(lb_policy=...)`` /

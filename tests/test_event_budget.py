@@ -67,3 +67,64 @@ def test_event_budget_and_determinism():
         f"event budget exceeded: {events_a} > {EVENT_BUDGET} — an "
         f"O(n_workers) background tax (idle polling timers, per-beat "
         f"sub-processes) has probably crept back into the hot path")
+
+
+# -- split-path budget (cp_fn_split_enabled) ----------------------------------
+# Exact count for the workload below: a dominant function that triggers the
+# full split lifecycle (split handoff, per-slice reconciles/creations on 4
+# subshard locks, merge handoff once the heat decays). The split path runs
+# extra *work-proportional* events — the handoffs, one reconcile per owning
+# subshard per tick — but nothing O(n_workers) or O(sim_time); this pin
+# catches a regression that makes split bookkeeping tick when idle, exactly
+# like the base pin does for the unsplit path.
+SPLIT_EVENT_BUDGET = 14_013
+SPLIT_WORKLOAD = dict(n_workers=48, cp_shards=4, n_side_functions=12,
+                      waves=4, hot_burst=64, wave_gap=3.0, horizon=16.0,
+                      seed=2024)
+
+
+def run_split_cell():
+    w = SPLIT_WORKLOAD
+    env = Environment(seed=w["seed"])
+    cl = Cluster(env, n_workers=w["n_workers"], runtime="firecracker",
+                 cp_shards=w["cp_shards"], cp_rebalance_enabled=True,
+                 cp_fn_split_enabled=True)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = ["hot"] + [f"f{i}" for i in range(w["n_side_functions"])]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="img://budget", port=80,
+            scaling=ScalingConfig(stable_window=1.0, panic_window=1.0,
+                                  scale_to_zero_grace=0.2)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        for _ in range(w["waves"]):
+            # one dominant function carries ~80% of each cold wave
+            for _ in range(w["hot_burst"]):
+                cl.invoke("hot", exec_time=0.05)
+            for n in names[1:]:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(w["wave_gap"])
+
+    env.process(driver(env), name="split-budget-driver")
+    env.run(until=w["horizon"])
+    return (env.events_processed, cl.collector.sandbox_creations,
+            cl.collector.fn_splits, cl.collector.fn_merges)
+
+
+def test_split_event_budget_and_determinism():
+    a = run_split_cell()
+    b = run_split_cell()
+    assert a == b, "split path broke seed-determinism"
+    events, creations, splits, merges = a
+    assert creations > 0, "workload did no real work"
+    assert splits >= 1 and merges >= 1, (
+        "the workload no longer exercises the full split lifecycle — the "
+        "budget would be pinning the wrong path")
+    assert events <= SPLIT_EVENT_BUDGET, (
+        f"split-path event budget exceeded: {events} > {SPLIT_EVENT_BUDGET} "
+        f"— per-slice bookkeeping has probably started costing events when "
+        f"idle (see module docstring before touching the budget)")

@@ -1,0 +1,554 @@
+"""Per-function creation sharding: fn→shard-set ownership
+(core/control_plane.py, ``cp_fn_split_enabled``).
+
+Claims pinned here:
+
+1. With split off (the default) nothing changes — table entries stay plain
+   ints and no split machinery runs (the bit-identity itself is pinned by
+   the goldens in tests/test_cp_sharding.py and tests/test_event_budget.py).
+
+2. A single dominant function — one no whole-function migration can fix —
+   is split across a shard-set: the indirection-table entry becomes a tuple
+   (home subshard first), every member shard owns a ``FunctionSlice``, new
+   creations run under the subshards' own scale locks on their own worker
+   partitions, and the hot shard's lock convoy measurably shrinks at equal
+   shard count while total creations stay equal.
+
+3. The split→merge round trip leaves the table, the shard maps, the global
+   ``FunctionState`` and the persisted ``shardmap/`` overrides consistent.
+
+4. ``recover_as_leader`` replays shard-set overrides so failover keeps the
+   split; recovered sandboxes are adopted into slices.
+
+5. Endpoint-flush entries pending on subshard queues during a merge handoff
+   travel to the surviving queue and are delivered exactly once.
+
+6. A deposed leader's in-flight split (or merge) aborts without touching
+   shared state.
+"""
+import pytest
+
+from repro.core import Cluster, Function, Sandbox, ScalingConfig
+from repro.core.autoscaler import split_shares
+from repro.simcore import Environment, stable_hash
+
+COLD_SCALING = dict(stable_window=1.0, panic_window=1.0,
+                    scale_to_zero_grace=0.2, cpu_req_millis=100,
+                    mem_req_mb=128)
+# for tests that assert on sandbox sets across handoffs: nothing scales to
+# zero (or down) behind the assertions
+LONG_SCALING = dict(stable_window=300, scale_to_zero_grace=300,
+                    cpu_req_millis=100, mem_req_mb=128)
+
+
+def make_cluster(seed=5, **kw):
+    env = Environment(seed=seed)
+    kw.setdefault("n_workers", 64)
+    kw.setdefault("runtime", "firecracker")
+    kw.setdefault("cp_shards", 4)
+    cl = Cluster(env, **kw)
+    cl.start()
+    return env, cl
+
+
+def preload(cl, names, scaling_kw=COLD_SCALING):
+    leader = cl.control_plane_leader()
+    for name in names:
+        fn = Function(name=name, image_url="img://bench", port=80,
+                      scaling=ScalingConfig(**scaling_kw))
+        leader.install_function(fn)
+        for dp in cl.data_planes:
+            dp.sync_functions([name])
+    return leader
+
+
+def drive_dominant(env, cl, hot="hot", side=(), hot_burst=120, until=24.0,
+                   period=4.0):
+    """Unison cold bursts where ``hot`` carries ~the whole creation load."""
+    def bursts(env):
+        while env.now < until:
+            for _ in range(hot_burst):
+                cl.invoke(hot, exec_time=0.05)
+            for n in side:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(period)
+    env.process(bursts(env), name="bursts")
+
+
+def assert_ownership_consistent(leader):
+    """Table ↔ shard maps ↔ slices all agree, for every function."""
+    owned = {}
+    for shard in leader.shards:
+        for n in shard.functions:
+            owned.setdefault(n, []).append(shard.shard_id)
+    for n, st in leader.functions.items():
+        ids = leader._fn_shard_ids(n)
+        assert sorted(owned.get(n, [])) == sorted(ids), \
+            f"{n}: shard maps {owned.get(n)} vs table {ids}"
+        if st.slices is None:
+            assert len(ids) == 1
+        else:
+            assert set(st.slices) == set(ids)
+            assert len(ids) >= 2
+            # every slice-owned sandbox exists globally; no sandbox is
+            # owned by two slices
+            seen = set()
+            for sl in st.slices.values():
+                assert sl.sandbox_ids <= set(st.sandboxes)
+                assert not (sl.sandbox_ids & seen)
+                seen |= sl.sandbox_ids
+
+
+# -- the share function -------------------------------------------------------
+
+def test_split_shares_round_robin_residual():
+    # shares always sum to desired, spread base+0/1, and the residual
+    # rotates deterministically with the cursor
+    for desired in range(0, 17):
+        for k in (2, 3, 4, 8):
+            for cursor in range(k):
+                shares = split_shares(desired, k, cursor)
+                assert sum(shares) == desired
+                assert max(shares) - min(shares) <= 1
+    # cursor semantics: positions (cursor + i) % k carry the residual
+    assert split_shares(5, 4, 0) == [2, 1, 1, 1]
+    assert split_shares(5, 4, 1) == [1, 2, 1, 1]
+    assert split_shares(5, 4, 3) == [1, 1, 1, 2]
+    assert split_shares(6, 4, 3) == [2, 1, 1, 2]
+
+
+# -- default off: inert -------------------------------------------------------
+
+def test_split_disabled_table_stays_ints():
+    env, cl = make_cluster(cp_rebalance_enabled=True)   # split NOT enabled
+    leader = preload(cl, ["hot"] + [f"s{i}" for i in range(6)])
+    drive_dominant(env, cl, side=[f"s{i}" for i in range(6)], until=12.0)
+    env.run(until=16.0)
+    assert cl.collector.fn_splits == 0
+    assert all(type(v) is int for v in leader.fn_shard_table.values())
+    assert all(st.slices is None for st in leader.functions.values())
+
+
+# -- split end to end ---------------------------------------------------------
+
+def hot_fn_cell(split: bool, seed=5):
+    env, cl = make_cluster(seed=seed, cp_rebalance_enabled=True,
+                           cp_fn_split_enabled=split)
+    side = [f"s{i}" for i in range(8)]
+    leader = preload(cl, ["hot"] + side)
+    drive_dominant(env, cl, side=side, until=24.0)
+    env.run(until=28.0)
+    lock_waits = sorted((s.lock_wait_s for s in leader.shards), reverse=True)
+    return env, cl, leader, lock_waits
+
+
+def test_dominant_fn_splits_and_spreads_the_convoy():
+    env, cl, leader, waits_on = hot_fn_cell(split=True)
+    assert cl.collector.fn_splits >= 1
+    assert all(not i.failed for i in cl.collector.invocations)
+    assert_ownership_consistent(leader)
+    # same workload without split: the dominant function convoys one lock
+    env0, cl0, leader0, waits_off = hot_fn_cell(split=False)
+    assert all(not i.failed for i in cl0.collector.invocations)
+    # equal shard count, hot-shard lock wait at least halved, same work
+    assert waits_on[0] < waits_off[0] / 2, \
+        f"split did not relieve the convoy: {waits_off[0]} -> {waits_on[0]}"
+    assert (cl.collector.sandbox_creations
+            == cl0.collector.sandbox_creations), "split changed the work"
+
+
+def test_split_creations_use_subshard_locks_and_partitions():
+    """While split, each subshard creates on its own worker partition — the
+    replicas of one function land across multiple partitions, and multiple
+    subshard locks accumulate wait from its bursts."""
+    env, cl = make_cluster(cp_rebalance_enabled=True, cp_fn_split_enabled=True,
+                           cp_fn_split_cooldown=60.0)   # hold the split
+    leader = preload(cl, ["hot"])
+    drive_dominant(env, cl, until=21.0)
+    env.run(until=19.5)        # mid-burst-cycle, shortly after a wave
+    st = leader.functions["hot"]
+    assert st.slices is not None, "dominant function never split"
+    members = leader._fn_shard_ids("hot")
+    assert leader.fn_shard_table["hot"] == members
+    assert members[0] == stable_hash("hot") % 4     # home first
+    parts = {sb.worker_id % 4 for sb in st.sandboxes.values()}
+    assert len(parts) >= 2, f"replicas stayed on one partition: {parts}"
+    assert parts <= set(members)    # shard-local placement per subshard
+    busy = [s.shard_id for s in leader.shards if s.lock_wait_s > 0.0]
+    assert len(set(busy) & set(members)) >= 2, \
+        f"creation load did not spread over subshard locks: {busy}"
+
+
+# -- split ↔ merge round trip --------------------------------------------------
+
+def test_split_merge_round_trip_consistent():
+    # park the automatic escalation (huge tick) — this test drives the
+    # handoffs directly for determinism
+    env, cl = make_cluster(cp_fn_split_enabled=True, cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"], scaling_kw=LONG_SCALING)
+    invs = [cl.invoke("f", exec_time=30.0) for _ in range(4)]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    st = leader.functions["f"]
+    n_before = set(st.sandboxes)
+    assert len(n_before) >= 2
+    home = leader._fn_shard_id("f")
+    others = [k for k in range(4) if k != home]
+    members = (home, others[0], others[1])
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    assert cl.collector.fn_splits == 1
+    assert leader.fn_shard_table["f"] == members
+    assert st.slices is not None and set(st.slices) == set(members)
+    # existing sandboxes were partitioned round-robin across the set
+    assert set().union(*(sl.sandbox_ids for sl in st.slices.values())) \
+        == n_before
+    assert_ownership_consistent(leader)
+    env.run(until=env.now + 1.0)
+    # durable shard-set override
+    rec = cl.store.peek_prefix("shardmap/")["shardmap/f"]
+    assert tuple(int(x) for x in rec.decode().split(",")) == members
+
+    ev = env.process(leader._merge_function("f"), name="merge")
+    env.run_until_event(ev)
+    env.run(until=env.now + 1.0)
+    assert cl.collector.fn_merges == 1
+    assert leader.fn_shard_table["f"] == home        # back to a plain int
+    assert st.slices is None
+    assert set(st.sandboxes) == n_before             # nothing lost
+    assert st.creating == 0
+    assert_ownership_consistent(leader)
+    # override either tombstoned (home is the hash default) or pointing home
+    shardmap = cl.store.peek_prefix("shardmap/")
+    if home == stable_hash("f") % 4:
+        assert "shardmap/f" not in shardmap
+    else:
+        assert int(shardmap["shardmap/f"].decode()) == home
+    # the function still scales: new work after the round trip succeeds
+    late = [cl.invoke("f", exec_time=0.01) for _ in range(3)]
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in late)
+
+
+def test_scale_to_zero_sees_global_count_and_merge_follows():
+    """A split function's slices all drain to zero (one coherent global
+    desired count drives every slice), then the merge escalation folds it
+    back automatically."""
+    env, cl = make_cluster(cp_rebalance_enabled=True, cp_fn_split_enabled=True,
+                           cp_fn_split_cooldown=3.0)
+    leader = preload(cl, ["hot"])
+    drive_dominant(env, cl, until=13.0)
+    env.run(until=12.0)
+    st = leader.functions["hot"]
+    assert st.slices is not None, "dominant function never split"
+    # traffic stops; grace 0.2 s + autoscale ticks drain every slice
+    env.run(until=40.0)
+    assert st.ready_count == 0 and st.creating == 0
+    assert st.slices is None, "cooled-down split never merged back"
+    assert cl.collector.fn_merges >= 1
+    assert type(leader.fn_shard_table["hot"]) is int
+    assert_ownership_consistent(leader)
+
+
+# -- failover -----------------------------------------------------------------
+
+def test_failover_replays_shard_set_override():
+    env, cl = make_cluster(cp_fn_split_enabled=True, enable_ha_sim=True,
+                           n_workers=16, cp_rebalance_period=1e9)
+    leader = cl.control_plane_leader()
+    for n in ("f", "g"):
+        # real registration: failover rebuilds from the persisted records
+        cl.register_sync(Function(name=n, image_url="img://bench", port=80,
+                                  scaling=ScalingConfig(**LONG_SCALING)))
+    invs = [cl.invoke("f", exec_time=30.0) for _ in range(4)]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4, (home + 3) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    env.run(until=env.now + 1.0)     # let the override persist
+    n_sandboxes = len(leader.functions["f"].sandboxes)
+    assert n_sandboxes >= 1
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 3.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not leader
+    st = new_leader.functions["f"]
+    assert new_leader.fn_shard_table["f"] == members
+    assert st.slices is not None and set(st.slices) == set(members)
+    assert_ownership_consistent(new_leader)
+    # sandbox state came back from the workers and was adopted into slices
+    assert len(st.sandboxes) == n_sandboxes
+    assert set().union(*(sl.sandbox_ids for sl in st.slices.values())) \
+        == set(st.sandboxes)
+    # the split function (and its unsplit sibling) still serve traffic
+    late = [cl.invoke(n, exec_time=0.01) for n in ("f", "g")]
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in late)
+
+
+# -- exactly-once endpoint flush ----------------------------------------------
+
+def test_merge_handoff_moves_pending_ep_flush_entries_exactly_once():
+    """Endpoint updates pending on several subshard queues when the merge
+    handoff runs must move to the surviving queue and reach every DP exactly
+    once — never dropped, never double-broadcast."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, n_workers=8,
+                           cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"])
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    st = leader.functions["f"]
+    adds = []
+    for dp in cl.data_planes:
+        orig = dp.add_endpoint
+
+        def spy(fn, sandbox, _orig=orig, _dp=dp):
+            adds.append((_dp.dp_id, sandbox.sandbox_id))
+            _orig(fn, sandbox)
+        dp.add_endpoint = spy
+    # one pending add per subshard queue, then merge in the same event-loop
+    # turn: the handoff (in-memory hops) wins the race against the batched
+    # flush (a gRPC), so the entries must travel with the merge
+    for i, k in enumerate(members):
+        sb = Sandbox(sandbox_id=901 + i, function_name="f",
+                     ip=(10, 0, 0, 1 + i), port=80, worker_id=k)
+        st.sandboxes[sb.sandbox_id] = sb
+        st.slices[k].sandbox_ids.add(sb.sandbox_id)
+        leader._queue_endpoint_update("add", "f", sb,
+                                      shard=leader.shards[k])
+        assert any(u[1] == "f" for u in leader.shards[k].ep_updates)
+    ev = env.process(leader._merge_function("f"), name="merge")
+    env.run_until_event(ev)
+    assert not any(u[1] == "f"
+                   for u in leader.shards[members[1]].ep_updates), \
+        "pending entry left behind on a dissolved subshard queue"
+    env.run(until=env.now + 1.0)
+    for dp in cl.data_planes:
+        assert sorted(dp.tables["f"].endpoints) == [901, 902]
+    for dp_id in range(len(cl.data_planes)):
+        for sid in (901, 902):
+            n = adds.count((dp_id, sid))
+            assert n == 1, f"dp{dp_id} saw endpoint {sid} {n} times"
+
+
+# -- deposed leader -----------------------------------------------------------
+
+@pytest.mark.parametrize("handoff", ["split", "merge"])
+def test_deposed_leader_split_handoff_aborts(handoff):
+    env, cl = make_cluster(cp_fn_split_enabled=True, n_workers=8,
+                           n_control_planes=1, cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"])
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4)
+    if handoff == "merge":
+        ev = env.process(leader._split_function("f", members), name="split")
+        env.run_until_event(ev)
+        env.run(until=env.now + 1.0)
+    table_before = dict(leader.fn_shard_table)
+    store_before = dict(cl.store.peek_prefix("shardmap/"))
+    splits_before = cl.collector.fn_splits
+    merges_before = cl.collector.fn_merges
+    proc = (leader._split_function("f", members) if handoff == "split"
+            else leader._merge_function("f"))
+    env.process(proc, name=handoff)
+    leader.stop()
+    env.run(until=env.now + 2.0)
+    assert cl.collector.fn_splits == splits_before
+    assert cl.collector.fn_merges == merges_before
+    assert leader.fn_shard_table == table_before
+    assert dict(cl.store.peek_prefix("shardmap/")) == store_before
+    if handoff == "split":
+        assert leader.functions["f"].slices is None
+        assert "f" not in leader.shards[members[1]].functions
+    else:
+        assert leader.functions["f"].slices is not None
+
+
+def test_split_during_inflight_creations_no_double_ownership():
+    """Regression: a sandbox still CREATING when the split handoff runs is
+    partitioned into a slice at split time; when it turns READY the
+    sole-owner creation path must not adopt it into a *second* slice."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"], scaling_kw=LONG_SCALING)
+    # queue 6 invocations and split while their sandboxes are mid-boot
+    # (firecracker restore ~40 ms; split at ~5 ms is inside every boot)
+    invs = [cl.invoke("f", exec_time=30.0) for _ in range(6)]
+    env.run(until=env.now + 0.005)
+    st = leader.functions["f"]
+    assert st.creating > 0, "no creation in flight — test lost its race"
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4, (home + 2) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    env.run(until=10.0)
+    assert all(not i.failed for i in invs)
+    assert st.ready_count >= 6
+    assert_ownership_consistent(leader)        # no sandbox owned twice
+    assert (sum(st.slice_ready(sl) for sl in st.slices.values())
+            == st.ready_count)
+
+
+def test_reinstall_of_split_function_collapses_to_home():
+    """Regression: install_function on a name whose table entry is a
+    shard-set (spec re-registration of a live split function) must not
+    crash — the fresh unsplit state collapses back to the home shard."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, n_workers=8,
+                           cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"])
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    fn2 = Function(name="f", image_url="img://v2", port=80,
+                   scaling=ScalingConfig(**COLD_SCALING))
+    st2 = leader.install_function(fn2)
+    assert leader.functions["f"] is st2
+    assert leader.fn_shard_table["f"] == home
+    assert st2.slices is None
+    assert "f" not in leader.shards[members[1]].functions
+    assert_ownership_consistent(leader)
+    inv = cl.invoke("f", exec_time=0.01)
+    env.run(until=env.now + 10.0)
+    assert not inv.failed
+
+
+def test_failover_replay_seeds_split_cooldown():
+    """Regression: a replayed shard-set starts with zero slice heat; without
+    the seeded cooldown, the new leader's first rebalance tick would merge
+    the split right back — failover must keep splits with hysteresis (and
+    the merge machinery must still work on the new leader afterwards)."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, enable_ha_sim=True,
+                           n_workers=32)    # rebalance loop at default period
+    leader = cl.control_plane_leader()
+    cl.register_sync(Function(name="hot", image_url="i", port=80,
+                              scaling=ScalingConfig(**COLD_SCALING)))
+    drive_dominant(env, cl, until=12.0)
+    env.run(until=11.0)
+    assert leader.functions["hot"].slices is not None, \
+        "dominant function never split before the failover"
+    members = leader.fn_shard_table["hot"]
+    merges_before = cl.collector.fn_merges
+    cl.fail_control_plane_leader()
+    t_fail = env.now
+    # several rebalance ticks on the new leader, traffic gone, heat ~zero:
+    # only the seeded cooldown keeps the replayed split alive
+    env.run(until=t_fail + 6.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not leader
+    st = new_leader.functions["hot"]
+    assert new_leader.fn_shard_table["hot"] == members
+    assert st.slices is not None, \
+        "replayed split merged back on the first rebalance tick"
+    assert st.split_cooldown_until > t_fail
+    assert cl.collector.fn_merges == merges_before
+    # ...and once the cooldown elapses with the function cold, the new
+    # leader's own merge escalation folds it home
+    env.run(until=t_fail + 30.0)
+    assert st.slices is None
+    assert cl.collector.fn_merges == merges_before + 1
+
+
+def test_merge_during_split_scale_down_reconcile():
+    """Regression: a global reconcile tearing a split function down yields
+    per victim (channel op / persisted delete); a merge handoff completing
+    inside such a yield dissolves the slices — the reconcile must bail out
+    instead of dereferencing them (pre-fix: AttributeError escapes the
+    process and the scale-down dies midway)."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, cp_rebalance_period=1e9,
+                           persist_sandbox_state=True)   # wide teardown yields
+    leader = preload(cl, ["f"], scaling_kw=LONG_SCALING)
+    invs = [cl.invoke("f", exec_time=0.05) for _ in range(6)]
+    env.run(until=env.now + 3.0)
+    st = leader.functions["f"]
+    assert st.ready_count >= 4
+    assert all(not i.failed for i in invs)
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4, (home + 2) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    # force a full scale-down and race a merge into the teardown window
+    st.autoscaler.desired = lambda t, cur: 0
+    env.process(leader._reconcile_function("f", st), name="global-reconcile")
+
+    def delayed_merge(env):
+        # lands inside the first victim's persisted teardown write
+        yield env.timeout(0.5e-3)
+        yield from leader._merge_function("f")
+
+    env.process(delayed_merge(env), name="delayed-merge")
+    env.run(until=env.now + 10.0)    # pre-fix: AttributeError escapes here
+    assert st.slices is None
+    assert cl.collector.fn_merges == 1
+    assert st.creating == 0
+    assert_ownership_consistent(leader)
+
+
+def test_eviction_remove_rides_owning_slice_queue():
+    """Regression: a dead worker's split-function replicas must queue their
+    endpoint removals on the owning *slice's* flush queue (the documented
+    exactly-once-per-subshard routing), not the home shard's."""
+    env, cl = make_cluster(cp_fn_split_enabled=True, n_workers=8,
+                           cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"])
+    home = leader._fn_shard_id("f")
+    other = (home + 1) % 4
+    ev = env.process(leader._split_function("f", (home, other)), name="split")
+    env.run_until_event(ev)
+    st = leader.functions["f"]
+    wid = next(w for w in cl.workers if w % 4 == other)
+    sb = Sandbox(sandbox_id=7001, function_name="f", ip=(10, 0, 0, 9),
+                 port=80, worker_id=wid)
+    st.sandboxes[sb.sandbox_id] = sb
+    st.slices[other].sandbox_ids.add(sb.sandbox_id)
+    calls = []
+    orig = leader._queue_endpoint_update
+
+    def spy(op, fn, payload, drain=True, shard=None):
+        calls.append((op, payload,
+                      None if shard is None else shard.shard_id))
+        return orig(op, fn, payload, drain=drain, shard=shard)
+
+    leader._queue_endpoint_update = spy
+    ev = env.process(
+        leader._evict_worker(leader._worker_shard(wid), wid), name="evict")
+    env.run_until_event(ev)
+    assert ("remove", 7001, other) in calls, calls
+
+
+def test_fn_split_max_shards_clamped_to_two():
+    """Regression: a shard-set ceiling below 2 used to make the escalation
+    select a dominant function every tick (suppressing whole moves for it)
+    while never being able to split it — the knob is clamped instead."""
+    env, cl = make_cluster(cp_fn_split_enabled=True,
+                           cp_fn_split_max_shards=1)
+    leader = cl.control_plane_leader()
+    assert leader.fn_split_max_shards == 2
+    preload(cl, ["hot"])
+    drive_dominant(env, cl, until=13.0)
+    env.run(until=12.0)
+    st = leader.functions["hot"]
+    assert st.slices is not None and len(st.slices) == 2
+
+
+# -- deregistration -----------------------------------------------------------
+
+def test_deregister_split_function_cleans_every_subshard():
+    env, cl = make_cluster(cp_fn_split_enabled=True, n_workers=8,
+                           cp_rebalance_period=1e9)
+    leader = preload(cl, ["f"])
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4, (home + 2) % 4)
+    ev = env.process(leader._split_function("f", members), name="split")
+    env.run_until_event(ev)
+    env.run(until=env.now + 1.0)
+    assert "shardmap/f" in cl.store.peek_prefix("shardmap/")
+    ev = env.process(leader.deregister_function("f"), name="dereg")
+    env.run_until_event(ev)
+    assert "f" not in leader.functions
+    assert "f" not in leader.fn_shard_table
+    assert all("f" not in s.functions for s in leader.shards)
+    assert not cl.store.peek_prefix("shardmap/"), "override not tombstoned"
