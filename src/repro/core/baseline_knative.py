@@ -65,8 +65,9 @@ class ApiServer:
     def __init__(self, env: Environment, costs: KnativeCosts):
         self.env = env
         self.costs = costs
-        self.cpu = env.resource(capacity=costs.apiserver_cores)
-        self.etcd_wal = env.resource(capacity=1)
+        self.cpu = env.resource(capacity=costs.apiserver_cores,
+                                name="apiserver-cpu")
+        self.etcd_wal = env.resource(capacity=1, name="etcd-wal")
         self.versions: Dict[str, int] = {}
         self.op_count = 0
         self.conflict_count = 0
@@ -185,7 +186,8 @@ class KnativeCluster:
             self.workers[wid] = info
             self.placer.add_node(wid, info.cpu_capacity_millis,
                                  info.mem_capacity_mb)
-            self._worker_kernel_locks[wid] = env.resource(capacity=1)
+            self._worker_kernel_locks[wid] = env.resource(
+                capacity=1, name=f"kn-kernel-lock-w{wid}")
         self._loops = [env.process(self._kpa_loop(), name="kpa")]
 
     # -- plumbing ------------------------------------------------------------------
@@ -302,7 +304,7 @@ class KnativeCluster:
 
     def _pick_endpoint(self, st: KnFunctionState) -> Optional[PodEndpoint]:
         best = None
-        for ep in st.endpoints.values():
+        for ep in st.endpoints.values():  # simlint: ok(dict-iteration): pod creation order is deterministic
             if ep.free > 0 and (best is None or ep.in_use < best.in_use):
                 best = ep
         if best is not None:
@@ -462,6 +464,7 @@ class KnativeCluster:
             for _ in range(2):
                 yield lock.acquire()
                 try:
+                    # simlint: ok(held-lock-timeout): modeled kernel hold
                     yield self.env.timeout(0.052)
                 finally:
                     lock.release()

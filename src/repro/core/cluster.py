@@ -352,9 +352,13 @@ class Cluster:
         leader = self.control_plane_leader()
         functions, endpoints = [], {}
         if leader is not None:
-            functions = list(leader.functions.keys())
-            endpoints = {fn: [s for s in st.sandboxes.values()]
-                         for fn, st in leader.functions.items()}
+            # both snapshots iterate insertion-ordered dicts whose writes
+            # (install_function / sandbox adoption) happen in deterministic
+            # event order, so the recovered DP tables replay byte-identically
+            # (regression: test_fault_tolerance.py::test_dp_recovery_snapshot_order)
+            functions = list(leader.functions.keys())  # simlint: ok(dict-iteration): install order is deterministic
+            endpoints = {fn: [s for s in st.sandboxes.values()]  # simlint: ok(dict-iteration): creation order is deterministic
+                         for fn, st in leader.functions.items()}  # simlint: ok(dict-iteration): install order is deterministic
         dp.recover(functions, endpoints)
         yield self.env.timeout(c.lb_reconfigure)
         if dp_id not in self._lb_backends:

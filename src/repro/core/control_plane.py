@@ -200,7 +200,8 @@ class ControlPlaneShard:
         self.shard_id = shard_id
         self.functions: Dict[str, FunctionState] = {}
         self.worker_last_hb: Dict[int, float] = {}
-        self.scale_lock = env.resource(capacity=1)
+        self.scale_lock = env.resource(capacity=1,
+                                       name=f"cp-scale-lock-{shard_id}")
         self.ep_updates: Deque[Tuple[str, str, object, bool]] = deque()
         self.ep_flush_scheduled = False
         self.lock_wait_s = 0.0
@@ -516,6 +517,7 @@ class ControlPlane:
             yield lock.acquire()
             shard.lock_wait_s += env.now - t0
             try:
+                # simlint: ok(held-lock-timeout): modeled C9 heartbeat
                 yield env.timeout(self.costs.cp_heartbeat_lock_hold)
             finally:
                 lock.release()
@@ -565,7 +567,7 @@ class ControlPlane:
         function was a sole owner (they complete against the global state
         and get adopted into a slice on readiness)."""
         return (st.ready_count + st.creating
-                + sum(sl.creating for sl in st.slices.values()))
+                + sum(sl.creating for sl in st.slices.values()))  # simlint: ok(dict-iteration): int sum, order-free
 
     def _split_targets(self, st: FunctionState) -> None:
         """Recompute per-slice desired shares, at most once per instant.
@@ -607,7 +609,7 @@ class ControlPlane:
             acts = [sl] if sl is not None else []
         else:
             acts = [st.slices[k] for k in sorted(st.slices)]
-        desired = sum(s.target for s in st.slices.values())
+        desired = sum(s.target for s in st.slices.values())  # simlint: ok(dict-iteration): int sum, order-free
         for sl in acts:
             if st.slices is None or st.slices.get(sl.shard_id) is not sl:
                 # the shard-set merged (or re-formed) while a teardown below
@@ -635,7 +637,7 @@ class ControlPlane:
                     yield from self._teardown_sandbox(st, sb)
 
     def _pick_victims(self, st: FunctionState, n: int) -> List[Sandbox]:
-        ready = [s for s in st.sandboxes.values()
+        ready = [s for s in st.sandboxes.values()  # simlint: ok(dict-iteration): unique-key sort below erases order
                  if s.state == SandboxState.READY]
         ready.sort(key=lambda s: -s.sandbox_id)    # newest first
         return ready[:n]
@@ -644,7 +646,9 @@ class ControlPlane:
                             n: int) -> List[Sandbox]:
         if n <= 0:
             return []
-        ready = [st.sandboxes[sid] for sid in sl.sandbox_ids
+        # sorted: sandbox_ids is a set; the unique-key sort below erases the
+        # iteration order, but a sorted sweep keeps the path replay-stable
+        ready = [st.sandboxes[sid] for sid in sorted(sl.sandbox_ids)
                  if sid in st.sandboxes
                  and st.sandboxes[sid].state == SandboxState.READY]
         ready.sort(key=lambda s: -s.sandbox_id)    # newest first
@@ -741,6 +745,7 @@ class ControlPlane:
                     break
                 shard.scale_lock.release()
             try:
+                # simlint: ok(held-lock-timeout): modeled scale-lock hold
                 yield self.env.timeout(self.costs.cp_scale_lock_hold)
                 wid = yield from self._place(shard, fn.scaling.cpu_req_millis,
                                              fn.scaling.mem_req_mb)
@@ -1013,14 +1018,14 @@ class ControlPlane:
                 continue
             hot = self.shards[hot_id]
             total_heat = sum(self._shard_fn_heat(st, hot_id)
-                             for st in hot.functions.values())
+                             for st in hot.functions.values())  # simlint: ok(dict-iteration): float sum; install order is deterministic
             # second gate, in *heat* (creation-count) terms: lock wait is
             # superlinear near saturation, so the wait ratio alone can trip
             # on a small real load gap (classic with 2 shards) and migration
             # then just ping-pongs the hotspot. Heat is linear in load —
             # require the same factor there before moving anything.
             cold_heat = sum(self._shard_fn_heat(st, cold_id)
-                            for st in self.shards[cold_id].functions.values())
+                            for st in self.shards[cold_id].functions.values())  # simlint: ok(dict-iteration): float sum; install order is deterministic
             if total_heat <= self.rebalance_hot_factor * cold_heat:
                 self._decay_heat()
                 continue
@@ -1030,7 +1035,7 @@ class ControlPlane:
             if total_heat > 0.0:
                 gap = hot_load - cold_load
                 movers = sorted(
-                    ((name, st) for name, st in hot.functions.items()
+                    ((name, st) for name, st in hot.functions.items()  # simlint: ok(dict-iteration): unique (heat, name) sort key erases order
                      if st.slices is None),   # split fns are already spread
                     key=lambda kv: (-kv[1].heat, kv[0]))
                 now = self.env.now
@@ -1136,6 +1141,7 @@ class ControlPlane:
             second.lock_wait_s += self.env.now - t0
             try:
                 # the handoff hop itself (one cross-shard message)
+                # simlint: ok(held-lock-timeout): quiesce hold, id-sorted
                 yield self.env.timeout(self.costs.cp_cross_shard_op)
                 if not (self.alive and self.is_leader):
                     return
@@ -1208,7 +1214,7 @@ class ControlPlane:
                 return False          # stale entry reaped; retry next tick
             if now < st.split_cooldown_until:
                 continue
-            if (sum(sl.heat for sl in st.slices.values())
+            if (sum(sl.heat for sl in st.slices.values())  # simlint: ok(dict-iteration): slice-map insertion order is deterministic
                     >= self.fn_split_min_load):
                 continue
             self._migration_inflight = True
@@ -1239,6 +1245,7 @@ class ControlPlane:
                 sh.lock_wait_s += self.env.now - t0
             try:
                 # one cross-shard hop per subshard recruited
+                # simlint: ok(held-lock-timeout): quiesce hold, id-sorted
                 yield self.env.timeout(
                     self.costs.cp_cross_shard_op * (len(shard_ids) - 1))
                 if not (self.alive and self.is_leader):
@@ -1251,7 +1258,7 @@ class ControlPlane:
                 order = sorted(shard_ids)
                 for i, sid in enumerate(sorted(st.sandboxes)):
                     slices[order[i % len(order)]].sandbox_ids.add(sid)
-                for sl in slices.values():
+                for sl in slices.values():  # simlint: ok(dict-iteration): slice-map insertion order is deterministic
                     sl.target = len(sl.sandbox_ids)
                     sl.heat = st.heat / len(shard_ids)
                 st.heat = 0.0
@@ -1303,6 +1310,7 @@ class ControlPlane:
                 yield sh.scale_lock.acquire()
                 sh.lock_wait_s += self.env.now - t0
             try:
+                # simlint: ok(held-lock-timeout): quiesce hold, id-sorted
                 yield self.env.timeout(
                     self.costs.cp_cross_shard_op * (len(member_ids) - 1))
                 if not (self.alive and self.is_leader):
@@ -1310,8 +1318,8 @@ class ControlPlane:
                 st = self.functions.get(name)
                 if st is None or st.slices is None:
                     return            # deregistered/merged since selection
-                st.creating += sum(sl.creating for sl in st.slices.values())
-                st.heat += sum(sl.heat for sl in st.slices.values())
+                st.creating += sum(sl.creating for sl in st.slices.values())  # simlint: ok(dict-iteration): int sum, order-free
+                st.heat += sum(sl.heat for sl in st.slices.values())  # simlint: ok(dict-iteration): slice-map insertion order is deterministic
                 st.slices = None
                 st.split_cooldown_until = (self.env.now
                                            + self.fn_split_cooldown)
@@ -1365,11 +1373,11 @@ class ControlPlane:
         for shard in self.shards:
             shard.functions = {}
             shard.worker_last_hb = {}
-        for key, rec in func_records.items():
+        for key, rec in func_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
             self.install_function(Function.from_record(rec))
         if self.rebalance_enabled or self.fn_split_enabled:
             shardmap = yield from self.store.read_prefix("shardmap/")
-            for key, rec in shardmap.items():
+            for key, rec in shardmap.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
                 name = key.split("/", 1)[1]
                 st = self.functions.get(name)
                 if st is None:
@@ -1419,7 +1427,7 @@ class ControlPlane:
                 self.fn_shard_table[name] = dst
         self.workers = {}
         self.placer = self._make_placer()
-        for key, rec in worker_records.items():
+        for key, rec in worker_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
             info = WorkerNodeInfo.from_record(rec)
             self.workers[info.worker_id] = info
             self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] \
@@ -1428,14 +1436,14 @@ class ControlPlane:
                                  info.mem_capacity_mb)
         # sync DP caches with the function list
         yield self.env.timeout(c.cp_recovery_dp_sync)
-        names = list(self.functions.keys())
+        names = list(self.functions.keys())  # simlint: ok(dict-iteration): install order is deterministic
         for dp in self.cluster.data_planes_alive():
             dp.sync_functions(names)
         # post-recovery: hold downscaling for one autoscaling window
         self.no_downscale_until = self.env.now + c.recovery_no_downscale
         self.start_leader()
         # async: workers push their sandbox lists; merge as they arrive
-        for wid in list(self.workers.keys()):
+        for wid in list(self.workers.keys()):  # simlint: ok(dict-iteration): registration order is deterministic
             self.env.process(self._merge_worker_sandboxes(wid),
                              name=f"merge-{wid}")
 

@@ -100,8 +100,10 @@ class DataPlane:
         self._lb_pick = LB_POLICIES[lb_policy]
         self.alive = True
         self.tables: Dict[str, FunctionTable] = {}
-        self._cpu = env.resource(capacity=costs.dp_cores)
-        self._ports = env.resource(capacity=costs.dp_port_pool)
+        self._cpu = env.resource(capacity=costs.dp_cores,
+                                 name=f"dp{dp_id}-cpu")
+        self._ports = env.resource(capacity=costs.dp_port_pool,
+                                   name=f"dp{dp_id}-ports")
         self._dirty: set[str] = set()   # functions with metric changes
         self._rng = env.rng(f"dp-{dp_id}")
         self._procs = []
@@ -383,6 +385,6 @@ class DataPlane:
         """Re-register with CP and repopulate caches (paper §3.4.1)."""
         self.alive = True
         self.sync_functions(functions)
-        for fn, sbs in endpoints.items():
+        for fn, sbs in endpoints.items():  # simlint: ok(dict-iteration): snapshot built in deterministic order
             for sb in sbs:
                 self.add_endpoint(fn, sb)

@@ -39,7 +39,7 @@ class SimStore:
         self.n_replicas = n_replicas
         self.data: Dict[str, bytes] = {}
         # The WAL is serialized: one fsync at a time (the contended resource).
-        self._wal = env.resource(capacity=1)
+        self._wal = env.resource(capacity=1, name="store-wal")
         self._rng = env.rng("persist")
         self.write_count = 0
         self.read_count = 0

@@ -92,7 +92,11 @@ class _ScoreIndex:
     def pop_best(self, placer: "Placer") -> Optional[int]:
         nodes, versions, score = placer.nodes, placer._versions, placer._score
         if self.pending:
-            for wid in self.pending:
+            # sorted: set iteration is hash-order (insertion-history
+            # dependent for ints); push order is invisible to the heap's
+            # (score, wid, version) total order, but a deterministic sweep
+            # keeps replay byte-identical if the scoring ever gains state
+            for wid in sorted(self.pending):
                 node = nodes.get(wid)
                 if node is None or not node.schedulable:
                     continue

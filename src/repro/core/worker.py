@@ -80,8 +80,9 @@ class WorkerDaemon:
         self.daemon_alive = True
         self.node_alive = True
         self.create_hook = create_hook  # live-mode: build the real replica
-        self._kernel_lock = env.resource(capacity=1)
-        self._netcfg_pool = env.store()
+        self._kernel_lock = env.resource(
+            capacity=1, name=f"kernel-lock-w{info.worker_id}")
+        self._netcfg_pool = env.store(name=f"netcfg-w{info.worker_id}")
         for _ in range(costs.netcfg_pool_size):
             self._netcfg_pool.put(object())
         self._rng = env.rng(f"worker-{info.worker_id}")
@@ -153,6 +154,7 @@ class WorkerDaemon:
                      else c.firecracker_kernel_lock)
         yield self._kernel_lock.acquire()
         try:
+            # simlint: ok(held-lock-timeout): modeled kernel critical section
             yield self.env.timeout(lock_hold)
         finally:
             self._kernel_lock.release()
@@ -212,9 +214,9 @@ class WorkerDaemon:
             if payload is not None:
                 # live mode: run real work; bill its wall time to the clock
                 import time
-                t0 = time.perf_counter()
+                t0 = time.perf_counter()  # simlint: ok(wall-clock): live mode bills real work
                 result = payload()
-                yield self.env.timeout(time.perf_counter() - t0)
+                yield self.env.timeout(time.perf_counter() - t0)  # simlint: ok(wall-clock): live mode bills real work
             else:
                 result = None
                 yield self.env.timeout(exec_time * self.slow_factor)

@@ -10,6 +10,7 @@ from repro.simcore.engine import (
     Timeout,
     stable_hash,
 )
+from repro.simcore.sanitize import SanitizeError, Sanitizer
 
 __all__ = [
     "AnyOf",
@@ -19,6 +20,8 @@ __all__ = [
     "Process",
     "Resource",
     "RngStream",
+    "SanitizeError",
+    "Sanitizer",
     "Store",
     "Timeout",
     "stable_hash",

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import zlib
 from collections import deque
 from dataclasses import dataclass, field
@@ -199,7 +200,18 @@ class Process(Event):
             return
         self._alive = False
         self._detach_target()
-        self.gen.close()
+        san = self.env.sanitizer
+        if san is None:
+            self.gen.close()
+        else:
+            # GeneratorExit unwinds finally blocks that may release locks:
+            # they must be attributed to this process
+            san.current = self
+            try:
+                self.gen.close()
+            finally:
+                san.current = None
+                san.on_process_end(self)
         if not self.triggered:
             self.succeed(None)
 
@@ -213,6 +225,9 @@ class Process(Event):
     def _throw(self, exc: BaseException) -> None:
         if not self._alive:
             return
+        san = self.env.sanitizer
+        if san is not None:
+            san.current = self
         try:
             nxt = self.gen.throw(exc)
         except StopIteration as stop:
@@ -225,11 +240,28 @@ class Process(Event):
         except BaseException as e:  # noqa: BLE001 — simpy semantics
             self._fail(e)
             return
+        finally:
+            if san is not None:
+                san.current = None
         self._wait_on(nxt)
 
     def _resume(self, value: Any, ok: bool) -> None:
         if not self._alive:
             return
+        san = self.env.sanitizer
+        if san is None:
+            # hot path, untouched when sanitize is off
+            try:
+                nxt = self.gen.send(value) if ok else self.gen.throw(value)
+            except StopIteration as stop:
+                self._finish(stop.value)
+                return
+            except BaseException as e:  # noqa: BLE001 — simpy semantics
+                self._fail(e)
+                return
+            self._wait_on(nxt)
+            return
+        san.current = self
         try:
             nxt = self.gen.send(value) if ok else self.gen.throw(value)
         except StopIteration as stop:
@@ -238,6 +270,8 @@ class Process(Event):
         except BaseException as e:  # noqa: BLE001 — simpy semantics
             self._fail(e)
             return
+        finally:
+            san.current = None
         self._wait_on(nxt)
 
     def _wait_on(self, evt: Any) -> None:
@@ -255,6 +289,9 @@ class Process(Event):
 
     def _finish(self, value: Any) -> None:
         self._alive = False
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_process_end(self)
         if not self.triggered:
             self.succeed(value)
 
@@ -262,6 +299,9 @@ class Process(Event):
         """Process raised: fail our event. A waiting parent gets the exception
         thrown at its yield; an unobserved failure crashes the event loop."""
         self._alive = False
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_process_end(self)
         if not self.triggered:
             self.fail(exc)
 
@@ -323,12 +363,16 @@ class AnyOf(Event):
 class Store:
     """Unbounded FIFO queue with blocking get()."""
 
-    def __init__(self, env: "Environment"):
+    def __init__(self, env: "Environment", name: Optional[str] = None):
         self.env = env
+        self.name = name
         self.items: Deque[Any] = deque()
         self._getters: Deque[Event] = deque()
 
     def put(self, item: Any) -> None:
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_store(self)
         if self._getters:
             evt = self._getters.popleft()
             evt.succeed(item)
@@ -336,6 +380,9 @@ class Store:
             self.items.append(item)
 
     def get(self) -> Event:
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_store(self)
         evt = Event(self.env)
         if self.items:
             evt.succeed(self.items.popleft())
@@ -360,12 +407,15 @@ class Resource:
     released. This is what lets the C9 heartbeat lock touches cost no events
     unless they actually collide with a creation (core/control_plane.py)."""
 
-    __slots__ = ("env", "capacity", "in_use", "_waiters", "_reserved_until")
+    __slots__ = ("env", "capacity", "in_use", "name", "_waiters",
+                 "_reserved_until")
 
-    def __init__(self, env: "Environment", capacity: int = 1):
+    def __init__(self, env: "Environment", capacity: int = 1,
+                 name: Optional[str] = None):
         self.env = env
         self.capacity = capacity
         self.in_use = 0
+        self.name = name
         self._waiters: Deque[Event] = deque()
         self._reserved_until: Optional[float] = None
 
@@ -393,6 +443,9 @@ class Resource:
             else:
                 return False        # an earlier lazy hold is still running
         if self.in_use < self.capacity and not self._waiters:
+            san = self.env.sanitizer
+            if san is not None:
+                san.on_reserve(self)
             self.in_use += 1
             self._reserved_until = until
             return True
@@ -400,6 +453,9 @@ class Resource:
 
     def acquire(self) -> Event:
         self._settle_reservation()
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_acquire(self)
         evt = Event(self.env)
         if self.in_use < self.capacity:
             self.in_use += 1
@@ -409,6 +465,9 @@ class Resource:
         return evt
 
     def release(self) -> None:
+        san = self.env.sanitizer
+        if san is not None:
+            san.on_release(self)
         if self._waiters:
             evt = self._waiters.popleft()
             evt.succeed(None)
@@ -454,15 +513,29 @@ def stable_hash(name: str) -> int:
 
 
 class Environment:
-    """The event loop. Time is float seconds."""
+    """The event loop. Time is float seconds.
 
-    def __init__(self, seed: int = 0):
+    ``sanitize=True`` (or env var ``REPRO_SANITIZE=1``) attaches a runtime
+    determinism sanitizer — lock-order cycle detection, same-instant tie
+    auditing, global-RNG discipline (see simcore/sanitize.py). The
+    sanitizer observes through hooks that are dead branches when off and
+    schedules no events when on, so event counts are bit-identical either
+    way."""
+
+    def __init__(self, seed: int = 0, sanitize: Optional[bool] = None):
         self.now: float = 0.0
         self._heap: list[tuple[float, int, Callable[[], None]]] = []
         self._next_seq = itertools.count().__next__
         self._seed = seed
         self._streams: dict[str, RngStream] = {}
         self.events_processed = 0   # wall-clock throughput accounting
+        if sanitize is None:
+            sanitize = os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+        if sanitize:
+            from .sanitize import Sanitizer
+            self.sanitizer: Optional["Sanitizer"] = Sanitizer(self)
+        else:
+            self.sanitizer = None
 
     # -- rng ---------------------------------------------------------------
     def rng(self, name: str) -> RngStream:
@@ -491,11 +564,12 @@ class Environment:
     def any_of(self, events: list[Event]) -> AnyOf:
         return AnyOf(self, events)
 
-    def store(self) -> Store:
-        return Store(self)
+    def store(self, name: Optional[str] = None) -> Store:
+        return Store(self, name)
 
-    def resource(self, capacity: int = 1) -> Resource:
-        return Resource(self, capacity)
+    def resource(self, capacity: int = 1,
+                 name: Optional[str] = None) -> Resource:
+        return Resource(self, capacity, name)
 
     def process(self, gen: Generator, name: str = "?") -> Process:
         return Process(self, gen, name)
@@ -516,6 +590,9 @@ class Environment:
         heapq.heappush(self._heap, (t, self._next_seq(), fn))
 
     def run(self, until: Optional[float] = None) -> None:
+        san = self.sanitizer
+        if san is not None:
+            san.begin_run()
         # localized loop: heap/pop bound once; the count is folded back in a
         # finally so events_processed stays correct when a callback raises
         heap = self._heap
@@ -525,6 +602,8 @@ class Environment:
             while heap:
                 if until is not None and heap[0][0] > until:
                     self.now = until
+                    if san is not None:
+                        san.end_run()
                     return
                 item = pop(heap)
                 self.now = item[0]
@@ -534,8 +613,13 @@ class Environment:
                 self.now = until
         finally:
             self.events_processed += n
+        if san is not None:
+            san.end_run()
 
     def run_until_event(self, evt: Event, hard_limit: float = 1e12) -> Any:
+        san = self.sanitizer
+        if san is not None:
+            san.begin_run()
         heap = self._heap
         pop = heapq.heappop
         n = 0
@@ -551,6 +635,8 @@ class Environment:
                 item[2]()
         finally:
             self.events_processed += n
+        if san is not None:
+            san.end_run()
         if not evt.fired:
             raise RuntimeError("event never triggered")
         return evt._value

@@ -237,3 +237,29 @@ def test_filestore_torn_tail_write(tmp_path):
     assert st2.read("k1") == b"v1"
     assert st2.read("k2") == b"v2"
     st2.close()
+
+
+def test_dp_recovery_snapshot_order():
+    """Regression for the snapshot block in Cluster._recover_data_plane:
+    the functions/endpoints the recovered DP is handed iterate insertion-
+    ordered CP dicts, and that insertion order must be reproducible — two
+    identical runs must rebuild byte-identical tables (keys *in order*) and
+    the identical event stream."""
+    def run_once():
+        env, cl = make_cluster(seed=11, n_workers=6)
+        for i in range(5):
+            cl.register_sync(Function(name=f"f{i}", image_url="i", port=80))
+        for i in range(5):
+            cl.invoke(f"f{i}", exec_time=0.01)
+        env.run(until=5.0)
+        dp = cl.data_planes[0]
+        cl.fail_data_plane(dp.dp_id)
+        env.run(until=25.0)          # systemd restart + resync + LB reload
+        ev = {k for _, k, _ in cl.collector.events}
+        assert "dp-recovered" in ev
+        return (list(dp.tables.keys()),
+                [(fn, list(tbl.endpoints.keys()))
+                 for fn, tbl in dp.tables.items()],
+                list(cl.collector.events))
+
+    assert run_once() == run_once()

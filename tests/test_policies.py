@@ -119,3 +119,33 @@ def test_cluster_runs_with_alternate_policies():
     invs = [cl.invoke("f", exec_time=0.5) for _ in range(4)]
     env.run(until=20.0)
     assert all(not i.failed for i in invs)
+
+
+def test_placer_pending_sweep_insertion_order_independent():
+    """Regression for the ``sorted(self.pending)`` sweep in
+    _ScoreIndex.pop_best (simlint: set-iteration): the placement sequence
+    must not depend on the *history* that populated the pending set. Two
+    placers with identical node state but opposite registration (and touch)
+    orders must place identically — and match the brute-force reference."""
+    fwd = Placer("balanced", use_index=True)
+    rev = Placer("balanced", use_index=True)
+    ref = Placer("balanced", use_index=False)
+    ids = list(range(12))
+    for wid in ids:
+        fwd.add_node(wid, 1000, 1000)
+        ref.add_node(wid, 1000, 1000)
+    for wid in reversed(ids):        # different insertion history into pending
+        rev.add_node(wid, 1000, 1000)
+    picks = []
+    for step in range(30):
+        a, b, c = fwd.place(100, 100), rev.place(100, 100), ref.place(100, 100)
+        assert a == b == c, f"diverged at step {step}: {a} {b} {c}"
+        picks.append(a)
+        if step == 14:
+            # mid-stream churn re-dirties pending in opposite orders too
+            for wid in ids[:6]:
+                fwd.release(wid, 50, 50)
+                ref.release(wid, 50, 50)
+            for wid in reversed(ids[:6]):
+                rev.release(wid, 50, 50)
+    assert len(set(picks)) > 1       # the workload actually exercised spread

@@ -1,0 +1,201 @@
+"""Runtime sanitizer (Environment(sanitize=True), simcore/sanitize.py).
+
+Three injected hazards must be caught — a lock-order inversion, a
+same-instant tie, a global-RNG draw — and, just as load-bearing, the
+sanitizer must be *invisible*: the event-budget cells from
+tests/test_event_budget.py must produce bit-identical pins with sanitize on
+and off, because the sanitizer only observes engine hooks and never
+schedules, draws, or mutates simulation state.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.simcore import Environment, SanitizeError
+
+
+def test_sanitize_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert Environment(seed=1).sanitizer is None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert Environment(seed=1).sanitizer is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert Environment(seed=1).sanitizer is not None
+    # explicit argument beats the environment variable
+    assert Environment(seed=1, sanitize=False).sanitizer is None
+
+
+# -- lock-order cycle detection ----------------------------------------------
+
+def _ab_then_ba(env, a, b):
+    """Two processes taking {a, b} in opposite orders — the inversion the
+    id-sorted quiesce discipline in control_plane.py exists to prevent."""
+    def locker(first, second, delay):
+        yield env.timeout(delay)
+        yield first.acquire()
+        yield env.timeout(0.05)
+        yield second.acquire()
+        second.release()
+        first.release()
+    env.process(locker(a, b, 0.0), name="fwd")
+    env.process(locker(b, a, 0.01), name="rev")
+
+
+def test_lock_order_inversion_raises():
+    env = Environment(seed=1, sanitize=True)
+    a = env.resource(capacity=1, name="lock-a")
+    b = env.resource(capacity=1, name="lock-b")
+    _ab_then_ba(env, a, b)
+    with pytest.raises(SanitizeError, match="lock-order cycle"):
+        env.run(until=1.0)
+    # the message names both resources and the established chain
+    msg = env.sanitizer.lock_cycles[0]
+    assert "lock-a" in msg and "lock-b" in msg
+
+
+def test_lock_order_inversion_silent_without_sanitize():
+    # same workload, sanitize off (explicitly, so this holds even under
+    # CI's REPRO_SANITIZE=1 sweep): the engine must not care
+    env = Environment(seed=1, sanitize=False)
+    a = env.resource(capacity=1, name="lock-a")
+    b = env.resource(capacity=1, name="lock-b")
+    _ab_then_ba(env, a, b)
+    env.run(until=1.0)   # no error, no sanitizer
+    assert env.sanitizer is None
+
+
+def test_consistent_lock_order_is_clean():
+    env = Environment(seed=1, sanitize=True)
+    locks = [env.resource(capacity=1, name=f"lock-{i}") for i in range(3)]
+
+    def sweep(delay):
+        yield env.timeout(delay)
+        for lk in locks:            # same global order in every process
+            yield lk.acquire()
+        yield env.timeout(0.02)
+        for lk in reversed(locks):
+            lk.release()
+
+    for i in range(4):
+        env.process(sweep(0.013 * i), name=f"sweeper-{i}")
+    env.run(until=2.0)
+    rep = env.sanitizer.report()
+    assert rep["lock_cycles"] == []
+    assert rep["lock_edges"] > 0        # the graph did record the holds
+
+
+# -- same-instant tie auditing ------------------------------------------------
+
+def test_same_instant_tie_recorded_not_raised():
+    env = Environment(seed=1, sanitize=True)
+    res = env.resource(capacity=4, name="shared-pool")
+
+    def toucher(i):
+        yield env.timeout(0.5)          # both processes arrive at t=0.5
+        yield res.acquire()
+        yield env.timeout(0.1)
+        res.release()
+
+    env.process(toucher(0), name="worker-0")
+    env.process(toucher(1), name="worker-1")
+    env.run(until=2.0)                  # ties are audited, never fatal
+    rep = env.sanitizer.report()
+    assert rep["tie_example_count"] > 0
+    # digit-normalized pair key: worker-0 vs worker-1 collapse to worker-#
+    assert any("shared-pool :: worker-# <> worker-#" == k
+               for k in rep["tie_hazards"])
+
+
+def test_distinct_instants_no_tie():
+    env = Environment(seed=1, sanitize=True)
+    res = env.resource(capacity=4, name="shared-pool")
+
+    def toucher(delay):
+        yield env.timeout(delay)
+        yield res.acquire()
+        res.release()
+
+    env.process(toucher(0.5), name="worker-0")
+    env.process(toucher(0.7), name="worker-1")
+    env.run(until=2.0)
+    assert env.sanitizer.report()["tie_hazards"] == {}
+
+
+# -- RNG discipline -----------------------------------------------------------
+
+def _pyrandom_drawer(env):
+    yield env.timeout(0.1)
+    random.random()                     # the leak
+
+
+def _np_drawer(env):
+    yield env.timeout(0.1)
+    np.random.rand()                    # the leak
+
+
+@pytest.mark.parametrize("leaker", [_pyrandom_drawer, _np_drawer])
+def test_global_rng_draw_raises(leaker):
+    env = Environment(seed=1, sanitize=True)
+    env.process(leaker(env), name="leaker")
+    with pytest.raises(SanitizeError, match="global RNG"):
+        env.run(until=1.0)
+    assert env.sanitizer.rng_violations
+
+
+def test_named_streams_are_clean():
+    env = Environment(seed=1, sanitize=True)
+
+    def drawer():
+        rng = env.rng("drawer")
+        for _ in range(10):
+            yield env.timeout(rng.uniform(0.01, 0.1))
+            rng.lognormal(-3.0, 0.5)
+
+    env.process(drawer(), name="drawer")
+    env.run(until=5.0)
+    assert env.sanitizer.report()["rng_violations"] == []
+
+
+# -- zero-cost when observing: bit-identical event pins -----------------------
+
+def _budget_cells():
+    # importable because pytest puts tests/ on sys.path for sibling modules
+    from test_event_budget import run_fixed_cell, run_split_cell
+    return run_fixed_cell, run_split_cell
+
+
+@pytest.mark.parametrize("cell", ["fixed", "split"])
+def test_budget_cell_pins_identical_sanitize_on_off(monkeypatch, cell):
+    """The acceptance pin: (events_processed, creations, ...) tuples from
+    the tier-1 budget cells are byte-identical with REPRO_SANITIZE=1 —
+    proof the sanitizer perturbs nothing it observes."""
+    run_fixed_cell, run_split_cell = _budget_cells()
+    run = run_fixed_cell if cell == "fixed" else run_split_cell
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    off = run()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    on = run()
+    assert on == off
+    # the absolute pins, so a change to both paths at once cannot hide
+    expected_events = 8_525 if cell == "fixed" else 14_013
+    assert off[0] <= expected_events
+
+
+def test_full_cluster_run_under_sanitize_reports():
+    """A real (small) cluster cell runs clean under sanitize and the report
+    is inspectable — the shape the CI sanitize step asserts on."""
+    from repro.core import Cluster, Function, ScalingConfig
+
+    env = Environment(seed=7, sanitize=True)
+    cl = Cluster(env, n_workers=4, runtime="firecracker")
+    cl.start()
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=1.0, panic_window=1.0)))
+    for _ in range(20):
+        cl.invoke("f", exec_time=0.02)
+    env.run(until=10.0)
+    rep = env.sanitizer.report()
+    assert rep["lock_cycles"] == []
+    assert rep["rng_violations"] == []

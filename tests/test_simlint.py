@@ -1,0 +1,320 @@
+"""simlint (src/repro/analysis): every rule fires on a minimal bad snippet,
+the suppression machinery works both ways (valid suppressions silence, stale
+ones are themselves findings), and — the actual point of the tool — the
+checked tree lints clean, so CI can fail on any new finding.
+"""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import DEFAULT_PATHS, Finding, RULES, lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(snippet: str):
+    return lint_source(textwrap.dedent(snippet), path="snippet.py")
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# -- builtin-hash -------------------------------------------------------------
+
+def test_builtin_hash_fires():
+    f = lint("""
+        def shard_of(name, n):
+            return hash(name) % n
+    """)
+    assert rules_of(f) == ["builtin-hash"]
+    assert "stable_hash" in f[0].message
+
+
+def test_stable_hash_is_clean():
+    assert lint("""
+        from repro.simcore import stable_hash
+        def shard_of(name, n):
+            return stable_hash(name) % n
+    """) == []
+
+
+# -- wall-clock ---------------------------------------------------------------
+
+@pytest.mark.parametrize("expr", [
+    "time.time()", "time.perf_counter()", "time.monotonic()",
+    "datetime.now()", "datetime.datetime.utcnow()",
+])
+def test_wall_clock_fires(expr):
+    f = lint(f"""
+        import time, datetime
+        def stamp(env):
+            return {expr}
+    """)
+    assert rules_of(f) == ["wall-clock"]
+
+
+def test_sim_clock_is_clean():
+    assert lint("""
+        def stamp(env):
+            return env.now
+    """) == []
+
+
+# -- global-rng ---------------------------------------------------------------
+
+@pytest.mark.parametrize("expr", [
+    "random.random()", "random.randint(0, 9)", "random.shuffle(xs)",
+    "np.random.rand()", "np.random.randint(4)", "numpy.random.choice(xs)",
+])
+def test_global_rng_fires(expr):
+    f = lint(f"""
+        import random
+        import numpy as np
+        import numpy
+        def draw(xs):
+            return {expr}
+    """)
+    assert rules_of(f) == ["global-rng"]
+
+
+@pytest.mark.parametrize("expr", [
+    "np.random.default_rng(seed)",        # constructing a generator is fine
+    "np.random.SeedSequence(seed)",
+    "random.Random(seed)",
+    "env.rng('stream').uniform(0, 1)",    # the sanctioned named stream
+])
+def test_seeded_rng_is_clean(expr):
+    assert lint(f"""
+        import random
+        import numpy as np
+        def draw(env, seed):
+            return {expr}
+    """) == []
+
+
+# -- set-iteration ------------------------------------------------------------
+
+def test_set_iteration_for_loop_fires():
+    f = lint("""
+        def sweep(pending: set):
+            for wid in pending:
+                print(wid)
+    """)
+    assert rules_of(f) == ["set-iteration"]
+
+
+def test_set_iteration_sorted_is_clean():
+    assert lint("""
+        def sweep(pending: set):
+            for wid in sorted(pending):
+                print(wid)
+    """) == []
+
+
+def test_set_iteration_tracks_assignments_and_attrs():
+    # local ``= set()`` and module-wide attribute facts both taint
+    f = lint("""
+        class Shard:
+            def __init__(self):
+                self.sandbox_ids = set()
+
+        def drain(shard, ids):
+            live = set()
+            for x in live:
+                pass
+            for s in shard.sandbox_ids:
+                pass
+    """)
+    assert rules_of(f) == ["set-iteration", "set-iteration"]
+
+
+def test_set_iteration_dataclass_field_fires():
+    # class-level ``field(default_factory=set)`` is an attribute fact
+    f = lint("""
+        from dataclasses import dataclass, field
+
+        @dataclass
+        class Slice:
+            sandbox_ids: set = field(default_factory=set)
+
+        def pick_victims(sl):
+            return [s for s in sl.sandbox_ids if s > 0]
+    """)
+    assert rules_of(f) == ["set-iteration"]
+
+
+def test_set_pop_fires():
+    f = lint("""
+        def take(pending: set):
+            return pending.pop()
+    """)
+    assert rules_of(f) == ["set-iteration"]
+    assert "arbitrary" in f[0].message
+
+
+def test_order_insensitive_sinks_are_clean():
+    # feeding a set comprehension into len/any/sorted cannot leak hash order
+    assert lint("""
+        def stats(pending: set):
+            n = len([x for x in pending])
+            hot = any(x > 3 for x in pending)
+            order = sorted(x for x in pending)
+            count = sum(1 for x in pending)
+            return n, hot, order, count
+    """) == []
+
+
+def test_order_sensitive_sum_fires():
+    # float accumulation order changes the rounded result — not exempt
+    f = lint("""
+        def total(loads: set):
+            return sum(x * 1.5 for x in loads)
+    """)
+    assert rules_of(f) == ["set-iteration"]
+
+
+# -- dict-iteration -----------------------------------------------------------
+
+def test_dict_iteration_fires_on_order_sensitive_path():
+    f = lint("""
+        def pick_victim(self):
+            for name in self.table.keys():
+                return name
+    """)
+    assert rules_of(f) == ["dict-iteration"]
+
+
+def test_dict_iteration_ignores_order_free_functions():
+    # same shape, but the enclosing function name is not on a
+    # scheduling/placement path — lexically out of scope for this rule
+    assert lint("""
+        def snapshot(self):
+            for name in self.table.keys():
+                yield name
+    """) == []
+
+
+# -- lock-order ---------------------------------------------------------------
+
+def test_lock_order_unsorted_pair_fires():
+    f = lint("""
+        def quiesce(self):
+            yield self.src.scale_lock.acquire()
+            yield self.dst.scale_lock.acquire()
+    """)
+    assert rules_of(f) == ["lock-order"]
+
+
+def test_lock_order_id_sorted_pair_is_clean():
+    # the quiesce discipline: sort the shard pair by unique id first
+    assert lint("""
+        def quiesce(self, src, dst):
+            first, second = sorted((src, dst), key=lambda s: s.shard_id)
+            yield first.scale_lock.acquire()
+            yield second.scale_lock.acquire()
+            second.scale_lock.release()
+            first.scale_lock.release()
+    """) == []
+
+
+# -- held-lock-timeout --------------------------------------------------------
+
+def test_held_lock_timeout_fires():
+    f = lint("""
+        def boot(self):
+            yield self.kernel_lock.acquire()
+            yield self.env.timeout(0.1)
+            self.kernel_lock.release()
+    """)
+    assert rules_of(f) == ["held-lock-timeout"]
+
+
+def test_release_before_timeout_is_clean():
+    assert lint("""
+        def boot(self):
+            yield self.kernel_lock.acquire()
+            self.kernel_lock.release()
+            yield self.env.timeout(0.1)
+    """) == []
+
+
+def test_held_lock_timeout_survives_loop_break():
+    # the _create_sandbox shape: acquire inside a loop, break while holding,
+    # then sleep — the scanner must carry the break-state out of the loop
+    f = lint("""
+        def create(self):
+            while True:
+                yield self.scale_lock.acquire()
+                break
+            yield self.env.timeout(0.1)
+            self.scale_lock.release()
+    """)
+    assert rules_of(f) == ["held-lock-timeout"]
+
+
+# -- suppressions -------------------------------------------------------------
+
+def test_trailing_suppression_covers_own_line():
+    assert lint("""
+        def shard_of(name, n):
+            return hash(name) % n  # simlint: ok(builtin-hash): test fixture
+    """) == []
+
+
+def test_standalone_suppression_covers_next_line():
+    assert lint("""
+        def boot(self):
+            yield self.kernel_lock.acquire()
+            # simlint: ok(held-lock-timeout): modeled hold, released below
+            yield self.env.timeout(0.1)
+            self.kernel_lock.release()
+    """) == []
+
+
+def test_suppression_is_rule_specific():
+    # a suppression for a different rule does not silence the finding
+    f = lint("""
+        def shard_of(name, n):
+            return hash(name) % n  # simlint: ok(wall-clock): wrong rule
+    """)
+    assert sorted(rules_of(f)) == ["builtin-hash", "stale-suppression"]
+
+
+def test_stale_suppression_flagged():
+    f = lint("""
+        def shard_of(name, n):
+            return (name, n)  # simlint: ok(builtin-hash): nothing here
+    """)
+    assert rules_of(f) == ["stale-suppression"]
+    assert "matches no finding" in f[0].message
+
+
+def test_unknown_rule_name_flagged():
+    f = lint("""
+        def shard_of(name, n):
+            return hash(name) % n  # simlint: ok(no-such-rule): typo
+    """)
+    assert "stale-suppression" in rules_of(f)
+    assert any("unknown rule" in x.message for x in f)
+
+
+# -- the tree itself ----------------------------------------------------------
+
+def test_checked_tree_is_clean():
+    """The acceptance gate: zero findings on the paths CI lints. Any new
+    finding here means either fix the code or add a justified suppression."""
+    paths = [os.path.join(REPO, p) for p in DEFAULT_PATHS]
+    findings = lint_paths(paths)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_finding_str_format():
+    f = Finding("a/b.py", 7, "builtin-hash", "msg")
+    assert str(f) == "a/b.py:7: [builtin-hash] msg"
+
+
+def test_all_rules_registered():
+    assert set(RULES) == {"builtin-hash", "wall-clock", "global-rng",
+                          "set-iteration", "lock-order"}

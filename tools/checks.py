@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Umbrella static-check runner: everything that gates a commit without
+running the simulator.
+
+    python tools/checks.py           # all checks (what CI's lint job runs)
+    python tools/checks.py --lint    # simlint only (docs/determinism.md)
+    python tools/checks.py --links   # markdown link/anchor check only
+
+Each check prints its own report; the exit code is non-zero if *any* check
+failed. Both checks are stdlib-only, so this needs no installed
+dependencies — ``python tools/checks.py`` works in a bare checkout.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# markdown targets mirror CI's docs job
+_MD_PATHS = ["README.md", "docs", "CHANGES.md", "ROADMAP.md", "PAPER.md"]
+
+
+def run_lint() -> int:
+    from repro.analysis import main as simlint_main
+    print("== simlint (determinism lint, docs/determinism.md) ==")
+    return simlint_main([])
+
+
+def run_links() -> int:
+    import check_markdown_links
+    print("== markdown link + anchor check ==")
+    paths = [p for p in (os.path.join(_REPO, m) for m in _MD_PATHS)
+             if os.path.exists(p)]
+    return check_markdown_links.main(paths)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="checks", description="run the repo's static checks")
+    parser.add_argument("--lint", action="store_true",
+                        help="run only simlint")
+    parser.add_argument("--links", action="store_true",
+                        help="run only the markdown link check")
+    args = parser.parse_args(argv)
+    selected = []
+    if args.lint or not (args.lint or args.links):
+        selected.append(run_lint)
+    if args.links or not (args.lint or args.links):
+        selected.append(run_links)
+    rc = 0
+    for check in selected:
+        rc |= check()
+        print()
+    print("checks: OK" if rc == 0 else "checks: FAILED")
+    return rc
+
+
+if __name__ == "__main__":
+    os.chdir(_REPO)   # simlint's default paths are repo-relative
+    sys.exit(main())

@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""Determinism lint for the DES control plane (thin CLI wrapper).
+
+Usage:
+    python tools/simlint.py                      # lint src/repro/{core,simcore}
+    python tools/simlint.py src/repro/core/x.py  # lint specific files
+    python tools/simlint.py --list-rules
+
+Rules, rationale and the ``# simlint: ok(<rule>): <why>`` suppression
+syntax are documented in docs/determinism.md. The implementation lives in
+src/repro/analysis/ and needs nothing beyond the standard library, so this
+runs in any CI job without installing the simulator's dependencies.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
