@@ -38,7 +38,17 @@ shard count with total creations unchanged,
 plus a live-mode smoke cell (``--live-smoke`` runs it alone): the same churn
 shape against workers whose ``create_hook`` builds a *real* replica payload,
 so wall-clock creation throughput covers actual sandbox construction work,
-not only DES bookkeeping (ROADMAP "live-mode churn bench").
+not only DES bookkeeping (ROADMAP "live-mode churn bench"),
+
+plus a multi-data-plane sweep (``multi_dp_sweep``, ``--multi-dp`` runs it
+alone): the ``single_hot_fn`` workload pushed *past* the ~1400 conn/s
+per-DP port ceiling (C5: 28k ephemeral ports / 20 s TIME_WAIT) that forced
+the hot-fn sweep to stay at rate 1500. The above-ceiling cell is recorded
+with the steering/connection knobs off (port exhaustion: the blowup PR 5
+could not record), then with fn→DP-set spreading (``dp_spread_enabled``),
+with invoke-path connection reuse (``dp_conn_reuse``), and with both +
+the coalesced CP→DP endpoint flush (``cp_ep_flush_coalesce``) — the fixed
+cells must land p99 back in the below-ceiling reference's regime.
 
 Emits ``BENCH_churn.json`` (schema in docs/benchmarks.md): results, a
 ``meta.provenance`` block (git SHA, python/numpy/jax versions, CPU count,
@@ -186,7 +196,12 @@ def skew_point(n_workers: int, rate: float, duration: float,
                weights: "np.ndarray | None" = None,
                names_prefix: str = "z",
                fn_split: bool = False,
-               fn_split_max_shards: "int | None" = None) -> dict:
+               fn_split_max_shards: "int | None" = None,
+               n_data_planes: int = 3,
+               dp_spread: bool = False,
+               conn_reuse: bool = False,
+               ep_coalesce: bool = False,
+               costs=None) -> dict:
     """One skew cell: Zipf-popularity function mix, unison cold bursts.
 
     Function *i* owns a Zipf(s) share of the offered rate and receives it as
@@ -210,7 +225,12 @@ def skew_point(n_workers: int, rate: float, duration: float,
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
                        cp_shards=cp_shards, cp_rebalance_enabled=rebalance,
                        cp_fn_split_enabled=fn_split,
-                       cp_fn_split_max_shards=fn_split_max_shards)
+                       cp_fn_split_max_shards=fn_split_max_shards,
+                       n_data_planes=n_data_planes,
+                       dp_spread_enabled=dp_spread,
+                       dp_conn_reuse=conn_reuse,
+                       cp_ep_flush_coalesce=ep_coalesce,
+                       costs=costs)
     if weights is None:
         weights = zipf_weights(n_functions, zipf_s)
     n_functions = len(weights)
@@ -257,6 +277,12 @@ def skew_point(n_workers: int, rate: float, duration: float,
         "steal_probes": cl.collector.steal_probes,
         "lock_wait_sim_s": round(sum(lock_waits), 4),
         "lock_wait_hottest_shard_s": round(lock_waits[0], 4),
+        "n_data_planes": n_data_planes,
+        "dp_spread": dp_spread, "dp_conn_reuse": conn_reuse,
+        "ep_coalesce": ep_coalesce,
+        "dp_spread_fns": len(cl.fn_dp_table),
+        "conn_hits": sum(dp.conn_hits for dp in cl.data_planes),
+        "conn_misses": sum(dp.conn_misses for dp in cl.data_planes),
         "done": stats["done"], "total": stats["total"],
         "p50_ms": round(stats["p50"] * 1e3, 3),
         "p99_ms": round(stats["p99"] * 1e3, 3),
@@ -269,7 +295,8 @@ def single_hot_fn_point(n_workers: int, rate: float, duration: float,
                         burst_period: float = 4.0, seed: int = 93,
                         cp_shards: int = 4, rebalance: bool = True,
                         fn_split: bool = False,
-                        fn_split_max_shards: "int | None" = None) -> dict:
+                        fn_split_max_shards: "int | None" = None,
+                        **dp_kw) -> dict:
     """One *dominant-function* cell: a single function carries ``hot_share``
     (~80%) of the offered creation load, the rest spread uniformly over the
     other functions — the irreducible-hotspot regime whole-function
@@ -283,10 +310,92 @@ def single_hot_fn_point(n_workers: int, rate: float, duration: float,
     cell = skew_point(n_workers, rate, duration, burst_period=burst_period,
                       seed=seed, cp_shards=cp_shards, rebalance=rebalance,
                       weights=weights, names_prefix="h", fn_split=fn_split,
-                      fn_split_max_shards=fn_split_max_shards)
+                      fn_split_max_shards=fn_split_max_shards, **dp_kw)
     cell["hot_share"] = hot_share
     cell["fn_split_max_shards"] = fn_split_max_shards
     return cell
+
+
+def _print_multi_dp(cell: dict) -> None:
+    print(f"multi-dp workers={cell['workers']} rate={cell['rate']:.0f} "
+          f"dps={cell['n_data_planes']} "
+          f"spread={'on' if cell['dp_spread'] else 'off'} "
+          f"reuse={'on' if cell['dp_conn_reuse'] else 'off'} "
+          f"coalesce={'on' if cell['ep_coalesce'] else 'off'}: "
+          f"spread_fns={cell['dp_spread_fns']} "
+          f"conn_hits={cell['conn_hits']}, "
+          f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
+          f"done={cell['done']}/{cell['total']}", flush=True)
+
+
+def multi_dp_cells(smoke: bool = False) -> list:
+    """The ``multi_dp_sweep`` cells: the single-hot-fn workload at and past
+    the per-DP port ceiling, knobs off vs on.
+
+    Full cells sit at rate 2500 (hot fn ≈ 2000 conn/s): each 4 s wave opens
+    an 8000-connection burst whose ports ride 20 s of TIME_WAIT, so one DP's
+    28k-port pool carries ~40k held ports by wave 5 — exhaustion mid-run
+    (this is the cell the PR 5 sweep could not record). Spread across a
+    width-3 DP-set the same load holds ~13k ports per DP; with connection
+    reuse the ports held scale with *concurrent* requests, not request
+    volume, and scale-to-zero teardown closes conns server-side (no
+    TIME_WAIT accumulation). ``fn_split`` stays on so the CP's scale lock
+    is not the binding constraint in any cell — what moves is the DP side.
+
+    Smoke cells shrink the regime instead of the arithmetic: a 3k-port pool
+    makes a 500-worker/rate-1000 cell (hot fn ≈ 3200-conn waves) exhaust a
+    single DP just as surely, in seconds."""
+    if smoke:
+        import dataclasses
+        from repro.core.costmodel import CostModel, DEFAULT_COSTS
+        small = CostModel(dirigent=dataclasses.replace(
+            DEFAULT_COSTS.dirigent, dp_port_pool=3000))
+        base = dict(n_workers=500, rate=1000.0, duration=8.0, cp_shards=4,
+                    rebalance=False, fn_split=True, costs=small)
+        return [
+            dict(base),
+            dict(base, dp_spread=True, ep_coalesce=True),
+            dict(base, conn_reuse=True),
+        ]
+    base = dict(n_workers=5000, duration=20.0, cp_shards=4,
+                rebalance=False, fn_split=True)
+    return [
+        # below-ceiling reference: the regime PR 5 recorded
+        dict(base, rate=1500.0),
+        # above the ~1400 conn/s ceiling, knobs off: port exhaustion
+        dict(base, rate=2500.0),
+        # the two independent fixes, then everything on
+        dict(base, rate=2500.0, dp_spread=True, ep_coalesce=True),
+        dict(base, rate=2500.0, conn_reuse=True),
+        dict(base, rate=2500.0, dp_spread=True, conn_reuse=True,
+             ep_coalesce=True),
+    ]
+
+
+def run_multi_dp_sweep(smoke: bool = False) -> list:
+    cells = []
+    for kw in multi_dp_cells(smoke):
+        cell = single_hot_fn_point(**kw)
+        cells.append(cell)
+        _print_multi_dp(cell)
+    return cells
+
+
+def run_multi_dp(out: str = "BENCH_churn.json", smoke: bool = False) -> dict:
+    """``--multi-dp``: run only the multi-DP sweep and merge it into the
+    existing out-file (preserving the recorded sweeps)."""
+    cells = run_multi_dp_sweep(smoke)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["multi_dp_sweep"] = {"provenance": bench_provenance(),
+                                "cells": cells}
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
 
 
 def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
@@ -521,6 +630,10 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
               f"p50={cell['p50_ms']:.1f}ms p99={cell['p99_ms']:.1f}ms "
               f"done={cell['done']}/{cell['total']}", flush=True)
 
+    # -- multi-data-plane sweep (the C5 port-ceiling regime) ----------------
+    result["multi_dp_sweep"] = {"provenance": result["meta"]["provenance"],
+                                "cells": run_multi_dp_sweep(smoke)}
+
     # -- live-mode smoke (real create_hook payloads; ROADMAP item) ----------
     result["live_smoke"] = cell = live_smoke_point()
     _print_live_smoke(cell)
@@ -572,6 +685,15 @@ def run(reporter, quick: bool = True) -> dict:
             f"p99_ms={cell['p99_ms']};"
             f"hot_lock_wait_s={cell['lock_wait_hottest_shard_s']};"
             f"splits={cell['fn_splits']};merges={cell['fn_merges']}")
+    for cell in result.get("multi_dp_sweep", {}).get("cells", []):
+        reporter.add(
+            f"churn/multidp/rate={cell['rate']:.0f}"
+            f"/spread={'on' if cell['dp_spread'] else 'off'}"
+            f"/reuse={'on' if cell['dp_conn_reuse'] else 'off'}",
+            cell["p50_ms"] * 1e3,
+            f"p99_ms={cell['p99_ms']};done={cell['done']};"
+            f"spread_fns={cell['dp_spread_fns']};"
+            f"conn_hits={cell['conn_hits']}")
     return result
 
 
@@ -582,9 +704,14 @@ if __name__ == "__main__":
     ap.add_argument("--live-smoke", action="store_true",
                     help="run only the live-mode (create_hook) churn cell "
                          "and merge it into --out")
+    ap.add_argument("--multi-dp", action="store_true",
+                    help="run only the multi-data-plane sweep and merge it "
+                         "into --out (honors --smoke)")
     ap.add_argument("--out", default="BENCH_churn.json")
     args = ap.parse_args()
     if args.live_smoke:
         run_live_smoke(out=args.out)
+    elif args.multi_dp:
+        run_multi_dp(out=args.out, smoke=args.smoke)
     else:
         run_bench(smoke=args.smoke, out=args.out)

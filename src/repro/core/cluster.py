@@ -37,6 +37,19 @@ under its own scale lock on its own worker partition, and merged back when
 its heat decays (``cp_fn_split_max_shards`` / ``cp_fn_split_min_load`` /
 ``cp_fn_split_cooldown`` override the ``DirigentCosts`` defaults). Operator
 guidance for all of these lives in docs/operations.md.
+
+Multi-data-plane serving (``dp_spread_*`` / ``dp_conn_reuse``): the DP-side
+twin of the CP scale-out above. With ``dp_spread_enabled=True`` the front
+end generalizes its ``stable_hash(fn) % n_dps`` steering to a **fn→DP-set**
+table (the fn→shard-set pattern one layer down): a function whose arrival
+rate crosses ``dp_spread_min_rate`` is spread round-robin across
+``dp_spread_width`` consecutive rotation members (home DP first), dividing
+its connection load — and therefore the paper's C5 per-DP ephemeral-port
+ceiling — across the set, while cold functions stay sticky to one DP and
+keep centralized in-flight accounting. ``dp_conn_reuse`` adds a keep-alive
+connection pool on the DP invoke path (port per connection, not per
+request). Both default off; the sticky one-connection-per-request front end
+stays bit-identical.
 """
 from __future__ import annotations
 
@@ -54,6 +67,19 @@ from repro.core.persistence import SimStore
 from repro.core.request import Invocation, InvocationMode
 from repro.core.worker import WorkerDaemon
 from repro.simcore import Environment, Event, Interrupt, stable_hash
+
+
+def fn_dp_set(fn: str, backends: List[int], width: int) -> tuple:
+    """The DP-set for a spread function: ``width`` consecutive members of the
+    LB rotation starting at the function's home slot (``stable_hash(fn) %
+    len(backends)``), home first. Pure and process-independent — any front
+    end (or test) computes the same set from the same rotation, exactly like
+    the CP's fn→shard-set. Width is clamped to the rotation size; width 1
+    degrades to the sole-DP sticky pick."""
+    n = len(backends)
+    width = max(1, min(width, n))
+    home = stable_hash(fn) % n
+    return tuple(backends[(home + i) % n] for i in range(width))
 
 
 class _HeartbeatWheel:
@@ -99,6 +125,12 @@ class Cluster:
                  cp_fn_split_max_shards: Optional[int] = None,
                  cp_fn_split_min_load: Optional[float] = None,
                  cp_fn_split_cooldown: Optional[float] = None,
+                 cp_ep_flush_coalesce: Optional[bool] = None,
+                 dp_spread_enabled: bool = False,
+                 dp_spread_width: Optional[int] = None,
+                 dp_spread_min_rate: Optional[float] = None,
+                 dp_conn_reuse: Optional[bool] = None,
+                 dp_conn_idle_timeout: Optional[float] = None,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
@@ -123,13 +155,16 @@ class Cluster:
                          fn_split_enabled=cp_fn_split_enabled,
                          fn_split_max_shards=cp_fn_split_max_shards,
                          fn_split_min_load=cp_fn_split_min_load,
-                         fn_split_cooldown=cp_fn_split_cooldown)
+                         fn_split_cooldown=cp_fn_split_cooldown,
+                         ep_flush_coalesce=cp_ep_flush_coalesce)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [
             DataPlane(env, i, self.costs, self, self.collector,
                       concurrency=sandbox_concurrency,
-                      hedge_after=hedge_after, lb_policy=lb_policy)
+                      hedge_after=hedge_after, lb_policy=lb_policy,
+                      conn_reuse=dp_conn_reuse,
+                      conn_idle_timeout=dp_conn_idle_timeout)
             for i in range(n_data_planes)
         ]
         self.workers: Dict[int, WorkerDaemon] = {}
@@ -152,6 +187,21 @@ class Cluster:
         # front-end LB rotation: dead DPs keep receiving traffic until the
         # keepalived health check removes them (paper §5.4 DP failover)
         self._lb_backends = [dp.dp_id for dp in self.data_planes]
+        # fn→DP-set steering (multi-DP serving; off by default). The table
+        # maps a hot function to its DP-set tuple (home first); functions
+        # absent from the table take the sticky hash pick unchanged.
+        c = self.costs
+        self._dp_spread_enabled = dp_spread_enabled
+        self._dp_spread_width = (c.dp_spread_width if dp_spread_width is None
+                                 else dp_spread_width)
+        self._dp_spread_min_rate = (
+            c.dp_spread_min_rate if dp_spread_min_rate is None
+            else dp_spread_min_rate)
+        self.fn_dp_table: Dict[str, tuple] = {}
+        self._dp_rr: Dict[str, int] = {}        # per-fn round-robin cursor
+        self._fe_counts: Dict[str, int] = {}    # arrivals this window
+        self._fe_window_start = env.now
+        self._dp_last_over: Dict[str, float] = {}   # last instant over rate
 
     # -- topology ------------------------------------------------------------------
     def control_planes_alive(self) -> List[ControlPlane]:
@@ -273,9 +323,74 @@ class Cluster:
         self.env.process(self._front_end(inv), name=f"inv-{inv.inv_id}")
         return inv
 
+    # -- fn→DP-set steering (multi-DP serving) --------------------------------
+    def spread_function(self, fn: str, width: Optional[int] = None) -> tuple:
+        """Install (or re-derive) a DP-set for ``fn`` explicitly. Used by the
+        auto-widener and by operators/tests pre-spreading a known-hot
+        function before its first burst."""
+        members = fn_dp_set(fn, self._lb_backends,
+                            self._dp_spread_width if width is None else width)
+        self.fn_dp_table[fn] = members
+        self._dp_rr.setdefault(fn, 0)
+        self._dp_last_over[fn] = self.env.now
+        self.collector.event(self.env.now, "fn-dp-spread", (fn, members))
+        return members
+
+    def _note_arrival(self, fn: str) -> None:
+        """Count front-end arrivals per window; widen a function's DP-set the
+        moment it crosses the spread threshold mid-window (waiting for the
+        window edge would eat a full burst on one DP's port pool)."""
+        c = self.costs
+        now = self.env.now
+        if now - self._fe_window_start >= c.dp_spread_window:
+            self._roll_spread_window(now)
+        n = self._fe_counts.get(fn, 0) + 1
+        self._fe_counts[fn] = n
+        if (fn not in self.fn_dp_table and len(self._lb_backends) > 1
+                and n >= self._dp_spread_min_rate * c.dp_spread_window):
+            self.spread_function(fn)
+
+    def _roll_spread_window(self, now: float) -> None:
+        c = self.costs
+        half = 0.5 * self._dp_spread_min_rate * c.dp_spread_window
+        for fn, cnt in self._fe_counts.items():
+            if fn in self.fn_dp_table and cnt >= half:
+                self._dp_last_over[fn] = now
+        stale = [fn for fn, members in self.fn_dp_table.items()
+                 if len(members) > 1
+                 and now - self._dp_last_over.get(fn, now) >= c.dp_spread_cooldown]
+        for fn in stale:
+            # cooled off: fold back to the sticky sole-DP path
+            del self.fn_dp_table[fn]
+            self._dp_rr.pop(fn, None)
+            self._dp_last_over.pop(fn, None)
+            self.collector.event(now, "fn-dp-narrow", fn)
+        self._fe_counts.clear()
+        self._fe_window_start = now
+
+    def _steer(self, fn: str) -> "DataPlane":
+        """Pick the DP for one invocation. Default path: the sticky hash pick,
+        arithmetic-identical to the pre-spread front end. Spread path: round-
+        robin over the function's DP-set, skipping members evicted from the
+        rotation (a *dead* member still in rotation is returned as-is — the
+        caller models the connection-refused window, same as sticky)."""
+        if self._dp_spread_enabled:
+            self._note_arrival(fn)
+            members = self.fn_dp_table.get(fn)
+            if members is not None:
+                live = [d for d in members if d in self._lb_backends]
+                if live:
+                    cur = self._dp_rr.get(fn, 0)
+                    self._dp_rr[fn] = cur + 1
+                    return self.data_planes[live[cur % len(live)]]
+        idx = stable_hash(fn) % len(self._lb_backends)
+        return self.data_planes[self._lb_backends[idx]]
+
     def _front_end(self, inv: Invocation) -> Generator:
         """HAProxy front-end: function-hash steering across the LB rotation
-        (which may briefly include a crashed DP until keepalived reacts)."""
+        (which may briefly include a crashed DP until keepalived reacts).
+        With ``dp_spread_enabled``, hot functions steer via the fn→DP-set
+        table instead (see ``_steer``)."""
         yield self.env.timeout(self.costs.lb_hop)
         if not self._lb_backends:
             inv.failed = True
@@ -283,8 +398,7 @@ class Cluster:
             inv.t_done = self.env.now
             self.collector.done(inv)
             return
-        idx = stable_hash(inv.function_name) % len(self._lb_backends)
-        dp = self.data_planes[self._lb_backends[idx]]
+        dp = self._steer(inv.function_name)
         if not dp.alive:
             inv.failed = True
             inv.failure_reason = "connection refused (dead DP in rotation)"

@@ -232,7 +232,8 @@ class ControlPlane:
                  fn_split_enabled: bool = False,
                  fn_split_max_shards: Optional[int] = None,
                  fn_split_min_load: Optional[float] = None,
-                 fn_split_cooldown: Optional[float] = None):
+                 fn_split_cooldown: Optional[float] = None,
+                 ep_flush_coalesce: Optional[bool] = None):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -288,6 +289,16 @@ class ControlPlane:
                                   else fn_split_cooldown)
         self._split_fns: set = set()
         self._migration_inflight = False
+        # cross-shard endpoint-flush coalescing: all shards' updates queued
+        # in one flush window ride a single combined broadcast (M per-DP
+        # deliveries per turn instead of N shards × M DPs). Off by default:
+        # the combined flush is one process instead of one per shard, so
+        # event counts — and the event-budget pins — shift.
+        self.ep_flush_coalesce = (costs.cp_ep_flush_coalesce
+                                  if ep_flush_coalesce is None
+                                  else ep_flush_coalesce)
+        self._ep_flush_pending: List[ControlPlaneShard] = []
+        self._ep_flush_scheduled = False
 
     # -- shard routing ---------------------------------------------------------------
     def _default_shard_id(self, name: str) -> int:
@@ -383,6 +394,7 @@ class ControlPlane:
         self._loops = []
         for shard in self.shards:
             shard.ep_updates.clear()
+        self._ep_flush_pending.clear()
 
     # -- user API --------------------------------------------------------------------
     def install_function(self, fn: Function) -> FunctionState:
@@ -874,11 +886,23 @@ class ControlPlane:
         self._schedule_ep_flush(shard)
 
     def _schedule_ep_flush(self, shard: ControlPlaneShard) -> None:
-        if not shard.ep_flush_scheduled:
-            shard.ep_flush_scheduled = True
-            self.env.process(
-                self._flush_endpoint_updates(shard),
-                name=f"cp{self.cp_id}-ep-flush-{shard.shard_id}")
+        if shard.ep_flush_scheduled:
+            return
+        shard.ep_flush_scheduled = True
+        if self.ep_flush_coalesce:
+            # cross-shard coalescing: park the shard on the pending list;
+            # one combined flush per turn drains every pending shard, so N
+            # shards × M DPs costs M per-DP deliveries, not N×M
+            self._ep_flush_pending.append(shard)
+            if not self._ep_flush_scheduled:
+                self._ep_flush_scheduled = True
+                self.env.process(
+                    self._flush_endpoint_updates_combined(),
+                    name=f"cp{self.cp_id}-ep-flush-all")
+            return
+        self.env.process(
+            self._flush_endpoint_updates(shard),
+            name=f"cp{self.cp_id}-ep-flush-{shard.shard_id}")
 
     def _flush_endpoint_updates(self, shard: ControlPlaneShard) -> Generator:
         yield self.env.timeout(self.costs.grpc_call)   # one batched broadcast
@@ -887,6 +911,27 @@ class ControlPlane:
         if not self.alive:
             return
         dps = self.cluster.data_planes_alive()
+        self._apply_ep_updates(updates, dps)
+
+    def _flush_endpoint_updates_combined(self) -> Generator:
+        """Coalesced variant (``ep_flush_coalesce``): one broadcast carries
+        every pending shard's updates, in shard scheduling order — the
+        per-update apply order is identical to the per-shard flushes, they
+        just share the wire."""
+        yield self.env.timeout(self.costs.grpc_call)   # one combined broadcast
+        pending, self._ep_flush_pending = self._ep_flush_pending, []
+        self._ep_flush_scheduled = False
+        batch: List[tuple] = []
+        for shard in pending:
+            updates, shard.ep_updates = shard.ep_updates, deque()
+            shard.ep_flush_scheduled = False
+            batch.extend(updates)
+        if not self.alive:
+            return
+        dps = self.cluster.data_planes_alive()
+        self._apply_ep_updates(batch, dps)
+
+    def _apply_ep_updates(self, updates, dps) -> None:
         for op, fn, payload, drain in updates:
             if op == "add":
                 # a dethroned leader must not introduce endpoints...

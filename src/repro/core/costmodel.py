@@ -68,6 +68,48 @@ class DirigentCosts:
     dp_port_hold: float = 20.0         # TIME_WAIT-ish hold per connection
     metrics_report_period: float = 0.25  # DP -> CP autoscaling metric push
 
+    # -- multi-data-plane serving (dp_spread_* / dp_conn_*) ------------------
+    # The DP-side twin of the cp_* scaling knobs: the paper's C5 ceiling
+    # (one DP's ephemeral ports cap the warm path; 28k ports / 20 s
+    # TIME_WAIT ≈ 1400 conn/s sustained) is a *per-DP* limit, so a single
+    # hot function — sticky to one DP under function-hash steering — hits
+    # it no matter how many DPs exist. No paper anchor (the paper's front
+    # end is sticky, one-connection-per-request); all of these only take
+    # effect via ``Cluster(dp_spread_enabled=True)`` / ``dp_conn_reuse`` —
+    # the defaults keep the sticky no-reuse front end bit-identically.
+    # Operator guidance: docs/operations.md.
+    dp_spread_width: int = 3           # DP-set size for a spread function:
+    #                                    members divide its connection load,
+    #                                    but each extra member dilutes the
+    #                                    in-flight signal one DP aggregates
+    dp_spread_min_rate: float = 1000.0  # front-end arrivals/s before a
+    #                                    function is spread — below the
+    #                                    ~1400 conn/s port ceiling so the
+    #                                    set widens before ports convoy
+    dp_spread_window: float = 1.0      # arrival-rate measurement window
+    dp_spread_cooldown: float = 10.0   # a spread function folds back to its
+    #                                    sole DP only after staying under
+    #                                    half of min_rate this long (bounds
+    #                                    widen/narrow flapping on bursts)
+    dp_conn_reuse: bool = False        # keep-alive connection pool on the
+    #                                    invoke path: a port is acquired per
+    #                                    *connection* and reused across
+    #                                    requests to the same endpoint,
+    #                                    instead of one port + TIME_WAIT
+    #                                    hold per request
+    dp_conn_idle_timeout: float = 60.0  # idle keep-alive expiry; a timed-out
+    #                                    conn closes client-side, so its
+    #                                    port pays the dp_port_hold
+    #                                    TIME_WAIT (endpoint-teardown closes
+    #                                    are server-side FINs: port freed
+    #                                    immediately)
+    cp_ep_flush_coalesce: bool = False  # batch the CP->DP endpoint broadcast
+    #                                    across CP shards per DP: all shards'
+    #                                    updates queued in one flush window
+    #                                    ride one combined broadcast (M per-DP
+    #                                    deliveries per turn instead of
+    #                                    N shards x M DPs)
+
     # -- control plane ------------------------------------------------------
     cp_sched_cpu: float = 0.05e-3      # autoscale+place decision compute ("fast")
     cp_heartbeat_lock_hold: float = 12e-6  # heartbeat touch of shared health

@@ -43,6 +43,14 @@ Mechanism → paper section map (claim ids C1..C12 as in costmodel.py):
     the Istio-gateway-bound baseline).
   * request hedging (``hedge_after``) — §4 pluggable-policy surface, off by
     default for paper fidelity (policies.py holds the LB policies).
+  * connection reuse (``conn_reuse``) — a per-endpoint keep-alive pool on
+    the invoke path: a port is acquired once per *connection* and reused
+    across requests instead of burning a ``dp_port_hold`` TIME_WAIT per
+    request. Close semantics follow TCP's asymmetry: an idle-timeout close
+    is DP-initiated, so the DP's port rides TIME_WAIT before freeing; an
+    endpoint-teardown close is server-initiated (the DP is the passive
+    closer), so the port frees immediately. Off by default — the paper's
+    one-connection-per-request path stays bit-identical.
 """
 from __future__ import annotations
 
@@ -81,11 +89,28 @@ class FunctionTable:
     creating_hint: int = 0      # CP-echoed count (metric freshness only)
 
 
+class _Conn:
+    """One keep-alive connection DP→endpoint. Pins the *pool object* its
+    port was acquired from: a DP crash rebuilds the port table (fresh
+    ``Resource``), and any straggler release from the old life must settle
+    against the old pool, never leak into the recovered one."""
+
+    __slots__ = ("sandbox_id", "pool", "idle_since", "closed")
+
+    def __init__(self, sandbox_id: int, pool):
+        self.sandbox_id = sandbox_id
+        self.pool = pool
+        self.idle_since = -1.0      # -1 while checked out
+        self.closed = False
+
+
 class DataPlane:
     def __init__(self, env: Environment, dp_id: int, costs: DirigentCosts,
                  cluster: "Cluster", collector: Collector,
                  concurrency: int = 1, hedge_after: Optional[float] = None,
-                 lb_policy: str = "least_loaded"):
+                 lb_policy: str = "least_loaded",
+                 conn_reuse: Optional[bool] = None,
+                 conn_idle_timeout: Optional[float] = None):
         self.env = env
         self.dp_id = dp_id
         self.costs = costs
@@ -95,6 +120,19 @@ class DataPlane:
         self.hedge_after = hedge_after   # straggler mitigation (None = off)
         self.hedged = 0
         self.hedge_wins = 0
+        self.conn_reuse = (costs.dp_conn_reuse if conn_reuse is None
+                           else conn_reuse)
+        self.conn_idle_timeout = (
+            costs.dp_conn_idle_timeout if conn_idle_timeout is None
+            else conn_idle_timeout)
+        # keep-alive pool: sandbox_id -> LIFO stack of parked _Conns (LIFO so
+        # the warmest conn is reused and the cold tail idles out)
+        self._idle_conns: Dict[int, List[_Conn]] = {}
+        self.conn_open = 0          # live conns (checked out + parked)
+        self.conn_hits = 0
+        self.conn_misses = 0
+        self.conn_expired = 0
+        self.time_wait_ports = 0    # ports riding TIME_WAIT after DP close
         from repro.core.policies import LB_POLICIES
         self.lb_policy = lb_policy
         self._lb_pick = LB_POLICIES[lb_policy]
@@ -137,10 +175,17 @@ class DataPlane:
             ep.draining = True
         else:
             tbl.endpoints.pop(sandbox_id, None)
+            if self.conn_reuse:
+                self._close_idle_conns(sandbox_id)
 
     def endpoint_count(self, fn: str) -> int:
         tbl = self.tables.get(fn)
         return len(tbl.endpoints) if tbl else 0
+
+    @property
+    def ports_in_use(self) -> int:
+        """Ports currently held on this DP (open conns + TIME_WAIT holds)."""
+        return self._ports.in_use
 
     # -- request path --------------------------------------------------------------
     def handle(self, inv: Invocation) -> Generator:
@@ -196,7 +241,15 @@ class DataPlane:
         c = self.costs
         inv.t_dispatch = self.env.now
         worker = self.cluster.worker_by_id(ep.sandbox.worker_id)
-        yield self._ports.acquire()
+        conn = None
+        if self.conn_reuse:
+            conn = yield from self._conn_acquire(ep.sandbox.sandbox_id)
+        else:
+            # capture the pool at acquire time: if the DP crashes and re-arms
+            # a fresh port table before this request unwinds, the TIME_WAIT
+            # release must settle against the pool the port came from
+            pool = self._ports
+            yield pool.acquire()
         hedge_ep = None
         try:
             jit = self._rng.lognormal(1.0, c.hop_jitter_sigma)
@@ -265,16 +318,105 @@ class DataPlane:
             yield self.env.timeout(
                 c.grpc_call * self._rng.lognormal(1.0, c.hop_jitter_sigma))
         finally:
-            # ephemeral port held in TIME_WAIT after the connection closes
-            def port_hold(env, ports=self._ports):
-                yield env.timeout(c.dp_port_hold)
-                ports.release()
-            self.env.process(port_hold(self.env), name="port-hold")
-        inv.t_done = self.env.now
-        self.collector.done(inv)
+            if conn is not None:
+                # keep-alive: park the connection for the next request to
+                # this endpoint (or close it if the endpoint is gone)
+                self._conn_release(conn, tbl)
+            else:
+                # ephemeral port held in TIME_WAIT after the per-request
+                # connection closes
+                def port_hold(env, ports=pool):
+                    yield env.timeout(c.dp_port_hold)
+                    ports.release()
+                self.env.process(port_hold(self.env), name="port-hold")
+        # a DP crash already failed-and-recorded this request (client conn
+        # lost); finishing the server side must not record it twice
+        crashed = (inv.failed and inv.t_done >= 0
+                   and inv.failure_reason == "data plane crash")
+        if not crashed:
+            inv.t_done = self.env.now
+            self.collector.done(inv)
         if hedge_ep is not None:
             self._release_slot(tbl, hedge_ep)
         self._release_slot(tbl, ep)
+
+    # -- keep-alive connection pool (conn_reuse) -----------------------------
+    def _conn_acquire(self, sandbox_id: int) -> Generator:
+        """Check out a keep-alive conn to this endpoint — a parked one if
+        available (zero events), else a new one for a fresh port."""
+        stack = self._idle_conns.get(sandbox_id)
+        if stack:
+            conn = stack.pop()
+            conn.idle_since = -1.0
+            self.conn_hits += 1
+            return conn
+        self.conn_misses += 1
+        pool = self._ports
+        yield pool.acquire()
+        self.conn_open += 1
+        return _Conn(sandbox_id, pool)
+
+    def _conn_release(self, conn: _Conn, tbl: FunctionTable) -> None:
+        if conn.closed:
+            return
+        if conn.pool is not self._ports or not self.alive:
+            # the DP crashed since this conn's port was acquired: the
+            # rebuilt pool never saw this port — settle the old one
+            conn.closed = True
+            conn.pool.release()
+            return
+        ep = tbl.endpoints.get(conn.sandbox_id)
+        if ep is None or ep.draining:
+            # endpoint torn down: server-initiated close, port frees now
+            self._close_conn(conn, time_wait=False)
+            return
+        now = self.env.now
+        conn.idle_since = now
+        self._idle_conns.setdefault(conn.sandbox_id, []).append(conn)
+        self.env.schedule_at(now + self.conn_idle_timeout,
+                             lambda: self._conn_expire(conn, now))
+
+    def _conn_expire(self, conn: _Conn, since: float) -> None:
+        """Idle timer fired: close the conn iff it is still parked from the
+        instant this timer was armed (a reuse in between re-arms a fresh
+        timer and this one must not fire under it)."""
+        if conn.closed or conn.idle_since != since:
+            return
+        stack = self._idle_conns.get(conn.sandbox_id)
+        if stack is not None and conn in stack:
+            stack.remove(conn)
+            if not stack:
+                self._idle_conns.pop(conn.sandbox_id, None)
+        self.conn_expired += 1
+        self._close_conn(conn, time_wait=True)
+
+    def _close_conn(self, conn: _Conn, time_wait: bool) -> None:
+        conn.closed = True
+        pool = conn.pool
+        if pool is not self._ports:
+            pool.release()      # straggler from a pre-crash life
+            return
+        self.conn_open -= 1
+        if not time_wait:
+            pool.release()      # passive close: no TIME_WAIT on our side
+            return
+        # active close by the DP: the port rides TIME_WAIT before freeing
+        self.time_wait_ports += 1
+
+        def _free(self=self, pool=pool):
+            if pool is self._ports:
+                self.time_wait_ports -= 1
+            pool.release()
+        self.env.schedule_at(self.env.now + self.costs.dp_port_hold, _free)
+
+    def _close_idle_conns(self, sandbox_id: int) -> None:
+        """Endpoint is gone: its parked conns got the server's FIN — close
+        them all, ports free immediately (we are the passive closer)."""
+        stack = self._idle_conns.pop(sandbox_id, None)
+        if not stack:
+            return
+        for conn in stack:
+            self._close_conn(conn, time_wait=False)
 
     def _report_dead_endpoint(self, fn: str, ep: Endpoint) -> None:
         """Dispatch hit a dead sandbox: stop routing to it and tell the CP so
@@ -293,6 +435,8 @@ class DataPlane:
         ep.in_use -= 1
         if ep.draining and ep.in_use == 0:
             tbl.endpoints.pop(ep.sandbox.sandbox_id, None)
+            if self.conn_reuse:
+                self._close_idle_conns(ep.sandbox.sandbox_id)
         self._drain_queue_tbl(tbl, hint=ep)
 
     def _drain_queue(self, fn: str) -> None:
@@ -378,6 +522,19 @@ class DataPlane:
             tbl.queue.clear()
             tbl.inflight = 0
             tbl.endpoints.clear()
+        # the crashed kernel forgets its whole port table: re-arm a fresh
+        # pool so recovery starts from zero ports in use. In-flight requests
+        # and TIME_WAIT holds from the old life captured the old pool object
+        # and settle against it — they must not leak into the recovered pool
+        # (regression: tests/test_data_plane.py).
+        self._ports = self.env.resource(capacity=self.costs.dp_port_pool,
+                                        name=f"dp{self.dp_id}-ports")
+        for stack in self._idle_conns.values():
+            for conn in stack:
+                conn.closed = True
+        self._idle_conns.clear()
+        self.conn_open = 0
+        self.time_wait_ports = 0
         return dropped
 
     def recover(self, functions: List[str],

@@ -98,9 +98,28 @@ def render_metrics(cluster: "Cluster") -> str:
         lines.append(f"dirigent_dp_inflight{{dp=\"{dp.dp_id}\","
                      f"alive=\"{dp.alive}\"}} {total_inflight}")
         lines.append(f"dirigent_dp_queue_depth{{dp=\"{dp.dp_id}\"}} {depth}")
+        # C5 visibility: port-pool occupancy is the warm-path ceiling signal
+        lines.append(f"dirigent_dp_ports_in_use{{dp=\"{dp.dp_id}\"}} "
+                     f"{dp.ports_in_use}")
+        if dp.conn_reuse:
+            tags = f"{{dp=\"{dp.dp_id}\"}}"
+            lines.append(f"dirigent_dp_conn_open{tags} {dp.conn_open}")
+            lines.append(f"dirigent_dp_conn_hits_total{tags} {dp.conn_hits}")
+            lines.append(f"dirigent_dp_conn_misses_total{tags} "
+                         f"{dp.conn_misses}")
+            lines.append(f"dirigent_dp_conn_expired_total{tags} "
+                         f"{dp.conn_expired}")
+            lines.append(f"dirigent_dp_time_wait_ports{tags} "
+                         f"{dp.time_wait_ports}")
         if dp.hedge_after is not None:
             lines.append(f"dirigent_dp_hedged_total{{dp=\"{dp.dp_id}\"}} "
                          f"{dp.hedged}")
+    if cluster.fn_dp_table:
+        # fn→DP-set steering: which functions are spread, and how wide
+        lines.append("# TYPE dirigent_fe_fn_dp_set_size gauge")
+        for name, members in sorted(cluster.fn_dp_table.items()):
+            lines.append(f"dirigent_fe_fn_dp_set_size"
+                         f"{{function=\"{name}\"}} {len(members)}")
     lines.append("# TYPE dirigent_worker_alive gauge")
     alive = sum(1 for w in cluster.workers.values() if w.daemon_alive)
     lines.append(f"dirigent_workers_alive {alive}")

@@ -1,0 +1,335 @@
+"""Data-plane behaviour: port pool, endpoint churn, connection reuse,
+crash accounting (paper §3.3 warm path, C5 port ceiling, §5.4 DP failover).
+
+The DP had no dedicated test module before the multi-DP work — its
+behaviour was pinned only incidentally through cluster/fault tests. These
+tests cover the invoke-path resources directly: the ephemeral-port pool
+(exhaustion blocks, TIME_WAIT hold timing, pool size = ``dp_port_pool``),
+dead-endpoint report/evict/reconcile, LB-policy selection under endpoint
+churn, the keep-alive connection pool (``dp_conn_reuse``: hit/miss/expiry
+and exact accounting vs the no-reuse golden), and the crash-accounting
+regressions the multi-DP work fixed (a recovered DP's port pool must start
+empty; a crashed request must be recorded exactly once).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import Cluster, Function, ScalingConfig
+from repro.core.costmodel import CostModel, DEFAULT_COSTS
+from repro.core.policies import LB_POLICIES
+from repro.simcore import Environment
+
+
+def make_cluster(seed=5, dirigent_overrides=None, **kw):
+    env = Environment(seed=seed)
+    costs = None
+    if dirigent_overrides:
+        costs = CostModel(dirigent=dataclasses.replace(
+            DEFAULT_COSTS.dirigent, **dirigent_overrides))
+    kw.setdefault("n_workers", 8)
+    cl = Cluster(env, costs=costs, **kw)
+    cl.start()
+    return env, cl
+
+
+PINNED = ScalingConfig(stable_window=300, scale_to_zero_grace=300)
+
+
+# -- port pool ----------------------------------------------------------------
+
+def test_port_pool_size_matches_knob():
+    _, cl = make_cluster()
+    assert all(dp._ports.capacity == DEFAULT_COSTS.dirigent.dp_port_pool
+               for dp in cl.data_planes)
+    _, cl = make_cluster(dirigent_overrides={"dp_port_pool": 7})
+    assert all(dp._ports.capacity == 7 for dp in cl.data_planes)
+
+
+def test_port_exhaustion_blocks_until_time_wait_release():
+    """With a 1-port pool, a second request must wait out the first one's
+    full ``dp_port_hold`` TIME_WAIT before its connection can open."""
+    hold = 5.0
+    env, cl = make_cluster(
+        n_data_planes=1,
+        dirigent_overrides={"dp_port_pool": 1, "dp_port_hold": hold})
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    first = cl.invoke("f", exec_time=0.01)
+    env.run(until=2.0)
+    assert not first.failed
+    dp = cl.data_planes[0]
+    # the connection closed but its port is riding TIME_WAIT
+    assert dp.ports_in_use == 1
+    second = cl.invoke("f", exec_time=0.01)
+    env.run(until=2.5)
+    assert second.t_done < 0, "second request should be port-blocked"
+    env.run(until=20.0)
+    assert not second.failed
+    # execution could not start before the first request's port freed at
+    # (its proxy end ≈ t_done) + hold
+    assert second.t_exec_start >= first.t_done + hold - 1e-9
+    assert second.t_done < first.t_done + hold + 1.0
+    env.run(until=second.t_done + hold + 1.0)
+    assert dp.ports_in_use == 0
+
+
+# -- dead-endpoint report / evict / reconcile ---------------------------------
+
+def test_dead_endpoint_evicted_and_reconciled():
+    """A dispatch into a sandbox that died behind the CP's back fails once,
+    evicts the endpoint from the DP table, and the CP reconciles capacity —
+    the next request lands on a replacement, not the corpse."""
+    env, cl = make_cluster()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    first = cl.invoke("f", exec_time=0.01)
+    env.run(until=5.0)
+    assert not first.failed
+    leader = cl.control_plane_leader()
+    sb = next(iter(leader.functions["f"].sandboxes.values()))
+    cl.workers[sb.worker_id].sandboxes.pop(sb.sandbox_id)
+    bad = cl.invoke("f", exec_time=0.01)
+    env.run(until=10.0)
+    assert bad.failed
+    assert all(sb.sandbox_id not in dp.tables["f"].endpoints
+               for dp in cl.data_planes)
+    assert sb.sandbox_id not in leader.functions["f"].sandboxes
+    later = cl.invoke("f", exec_time=0.01)
+    env.run(until=25.0)
+    assert not later.failed
+
+
+# -- LB policy selection under endpoint churn ---------------------------------
+
+@pytest.mark.parametrize("policy", sorted(LB_POLICIES))
+def test_lb_policy_serves_through_endpoint_churn(policy):
+    """Every LB policy keeps routing to live endpoints while endpoints are
+    drained and removed under it mid-traffic."""
+    env, cl = make_cluster(lb_policy=policy, n_workers=6)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    warm = [cl.invoke("f", exec_time=0.5) for _ in range(3)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in warm)
+    # every DP caches the endpoints; traffic hash-steers to exactly one
+    dp = cl._steer("f")
+    n_eps = len(dp.tables["f"].endpoints)
+    assert n_eps >= 2
+    # churn: drain-remove one endpoint while requests hold its slot
+    inflight = [cl.invoke("f", exec_time=1.0) for _ in range(n_eps)]
+    env.run(until=env.now + 0.2)
+    victim = next(ep for ep in dp.tables["f"].endpoints.values()
+                  if ep.in_use > 0)
+    dp.remove_endpoint("f", victim.sandbox.sandbox_id, drain=True)
+    # drained, not yanked: the in-flight request on it must still finish
+    assert victim.draining
+    env.run(until=env.now + 5.0)
+    assert all(not i.failed for i in inflight)
+    # reaped at last release, and traffic keeps flowing on the survivors
+    assert victim.sandbox.sandbox_id not in dp.tables["f"].endpoints
+    after = [cl.invoke("f", exec_time=0.05) for _ in range(4)]
+    env.run(until=env.now + 5.0)
+    assert all(not i.failed for i in after)
+
+
+# -- connection reuse (dp_conn_reuse) -----------------------------------------
+
+def test_conn_reuse_hit_miss_and_port_accounting():
+    env, cl = make_cluster(n_data_planes=1, dp_conn_reuse=True)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    first = cl.invoke("f", exec_time=0.01)
+    env.run(until=3.0)
+    dp = cl.data_planes[0]
+    assert not first.failed
+    assert (dp.conn_misses, dp.conn_hits) == (1, 0)
+    assert dp.conn_open == 1 and dp.time_wait_ports == 0
+    # the conn is parked, holding its port — no TIME_WAIT burn per request
+    assert dp.ports_in_use == 1
+    for _ in range(3):
+        inv = cl.invoke("f", exec_time=0.01)
+        env.run(until=env.now + 1.0)
+        assert not inv.failed
+    assert (dp.conn_misses, dp.conn_hits) == (1, 3)
+    assert dp.ports_in_use == dp.conn_open + dp.time_wait_ports == 1
+
+
+def test_conn_idle_expiry_pays_time_wait():
+    """An idle-timeout close is DP-initiated, so the port rides TIME_WAIT
+    for ``dp_port_hold`` before returning to the pool."""
+    idle, hold = 2.0, 5.0
+    env, cl = make_cluster(
+        n_data_planes=1, dp_conn_reuse=True, dp_conn_idle_timeout=idle,
+        dirigent_overrides={"dp_port_hold": hold})
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    inv = cl.invoke("f", exec_time=0.01)
+    env.run(until=1.0)
+    assert not inv.failed
+    dp = cl.data_planes[0]
+    t_parked = inv.t_done
+    env.run(until=t_parked + idle + 0.1)
+    assert dp.conn_expired == 1 and dp.conn_open == 0
+    assert dp.time_wait_ports == 1 and dp.ports_in_use == 1
+    env.run(until=t_parked + idle + hold + 0.1)
+    assert dp.time_wait_ports == 0 and dp.ports_in_use == 0
+
+
+def test_endpoint_teardown_closes_idle_conns_without_time_wait():
+    """An endpoint teardown is a server-initiated close: the DP is the
+    passive closer, so parked conns free their ports immediately."""
+    env, cl = make_cluster(n_data_planes=1, dp_conn_reuse=True)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    inv = cl.invoke("f", exec_time=0.01)
+    env.run(until=3.0)
+    assert not inv.failed
+    dp = cl.data_planes[0]
+    assert dp.conn_open == 1 and dp.ports_in_use == 1
+    sid = next(iter(dp.tables["f"].endpoints))
+    dp.remove_endpoint("f", sid, drain=False)
+    assert dp.conn_open == 0
+    assert dp.time_wait_ports == 0 and dp.ports_in_use == 0
+
+
+def test_conn_reuse_latencies_exact_vs_noreuse_golden():
+    """In an uncontended pool the reuse path must be *time*-identical to the
+    no-reuse path per invocation (it only removes port TIME_WAIT churn, it
+    models no new latency), while processing strictly fewer events."""
+    def run(reuse):
+        env, cl = make_cluster(seed=11, n_data_planes=1, dp_conn_reuse=reuse)
+        cl.register_sync(Function(name="f", image_url="i", port=80,
+                                  scaling=PINNED))
+        invs = []
+        for _ in range(6):
+            invs.append(cl.invoke("f", exec_time=0.02))
+            env.run(until=env.now + 1.0)
+        env.run(until=env.now + 5.0)
+        assert all(not i.failed for i in invs)
+        return [i.e2e_latency for i in invs], env.events_processed
+
+    lat_off, events_off = run(False)
+    lat_on, events_on = run(True)
+    assert lat_on == lat_off
+    assert events_on < events_off
+
+
+# -- crash accounting (regressions pinned by the multi-DP work) ---------------
+
+def test_dp_crash_does_not_leak_ports_into_recovered_pool():
+    """Regression: ports held by in-flight requests (and their TIME_WAIT
+    holds) at crash time used to release into the *recovered* DP's pool,
+    under-counting — or, with a fresh pool, crash a ``release without
+    acquire``. The recovered DP must start at zero ports in use and absorb
+    the old life's stragglers silently."""
+    hold = 50.0
+    env, cl = make_cluster(
+        n_data_planes=1, enable_ha_sim=True,
+        dirigent_overrides={"dp_port_pool": 4, "dp_port_hold": hold})
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    warm = cl.invoke("f", exec_time=0.01)
+    env.run(until=3.0)
+    assert not warm.failed
+    victim = cl.invoke("f", exec_time=2.0)   # in flight across the crash
+    env.run(until=env.now + 0.5)
+    dp = cl.data_planes[0]
+    assert victim.inv_id in dp.inflight_requests
+    t_crash = env.now
+    cl.fail_data_plane(0)
+    assert victim.failed and victim.failure_reason == "data plane crash"
+    # recovered pool starts empty even though old TIME_WAIT holds (hold=50)
+    # are still pending against the old life
+    env.run(until=t_crash + 5.0)
+    assert dp.alive and dp.ports_in_use == 0
+    after = [cl.invoke("f", exec_time=0.01) for _ in range(4)]
+    env.run(until=t_crash + 20.0)
+    assert all(not i.failed for i in after)
+    # run past every straggler's TIME_WAIT: old-pool releases must not
+    # underflow anything (Resource raises on release-without-acquire)
+    env.run(until=t_crash + 2 * hold)
+    assert dp.ports_in_use == 0
+
+
+def test_dp_crash_records_inflight_request_exactly_once():
+    """Regression: a request in flight across a DP crash was recorded twice
+    — once by ``fail()`` and again when its proxy generator unwound."""
+    env, cl = make_cluster(n_data_planes=1, enable_ha_sim=True)
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    warm = cl.invoke("f", exec_time=0.01)
+    env.run(until=3.0)
+    assert not warm.failed
+    victim = cl.invoke("f", exec_time=2.0)
+    env.run(until=env.now + 0.5)
+    cl.fail_data_plane(0)
+    env.run(until=env.now + 30.0)
+    records = [i for i in cl.collector.invocations
+               if i.inv_id == victim.inv_id]
+    assert len(records) == 1 and records[0].failed
+
+
+def test_dp_crash_closes_parked_conns_and_recovers_clean():
+    env, cl = make_cluster(
+        n_data_planes=1, enable_ha_sim=True, dp_conn_reuse=True,
+        dp_conn_idle_timeout=4.0,
+        dirigent_overrides={"dp_port_pool": 4, "dp_port_hold": 50.0})
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=PINNED))
+    warm = cl.invoke("f", exec_time=0.01)
+    env.run(until=3.0)
+    assert not warm.failed
+    dp = cl.data_planes[0]
+    assert dp.conn_open == 1          # one parked keep-alive conn
+    t_crash = env.now
+    cl.fail_data_plane(0)
+    assert dp.conn_open == 0 and dp.ports_in_use == 0
+    env.run(until=t_crash + 5.0)
+    assert dp.alive
+    after = [cl.invoke("f", exec_time=0.01) for _ in range(4)]
+    env.run(until=t_crash + 20.0)
+    assert all(not i.failed for i in after)
+    # stale idle-expiry timers from the old life must not touch the new
+    # pool's accounting
+    env.run(until=t_crash + 120.0)
+    assert dp.ports_in_use == dp.conn_open + dp.time_wait_ports
+
+
+# -- fn→DP-set spread under DP failure ----------------------------------------
+
+def test_spread_hot_fn_survives_dp_failure_and_member_rejoins():
+    """Fail one member of a hot function's DP-set: after the keepalived
+    health check the survivors absorb the re-steer, and the recovered
+    member rejoins the rotation."""
+    # min_rate=1: the test's trickle of arrivals keeps the set hot, so the
+    # cooldown narrow never folds it back mid-test
+    env, cl = make_cluster(n_workers=12, n_data_planes=3,
+                           enable_ha_sim=True, dp_spread_enabled=True,
+                           dp_spread_min_rate=1.0)
+    cl.register_sync(Function(name="hot", image_url="i", port=80,
+                              scaling=PINNED))
+    members = cl.spread_function("hot", width=3)
+    assert len(members) == 3
+    warm = [cl.invoke("hot", exec_time=0.05) for _ in range(6)]
+    env.run(until=10.0)
+    assert all(not i.failed for i in warm)
+    dead = members[0]
+    cl.fail_data_plane(dead)
+    # past the health-check window: the dead member is out of the rotation
+    env.run(until=env.now + cl.costs.lb_health_check + 0.05)
+    assert dead not in cl._lb_backends
+    during = [cl.invoke("hot", exec_time=0.5) for _ in range(6)]
+    env.run(until=env.now + 0.2)
+    # survivors absorb the re-steer round-robin: both carry in-flight load
+    survivors = [cl.data_planes[d] for d in members if d != dead]
+    assert all(len(dp.inflight_requests) > 0 for dp in survivors)
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in during)
+    # recovery: the member is back in the rotation and takes traffic again
+    assert dead in cl._lb_backends
+    after = [cl.invoke("hot", exec_time=0.5) for _ in range(6)]
+    env.run(until=env.now + 0.2)
+    assert len(cl.data_planes[dead].inflight_requests) > 0
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in after)

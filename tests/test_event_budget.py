@@ -128,3 +128,70 @@ def test_split_event_budget_and_determinism():
         f"split-path event budget exceeded: {events} > {SPLIT_EVENT_BUDGET} "
         f"— per-slice bookkeeping has probably started costing events when "
         f"idle (see module docstring before touching the budget)")
+
+
+# -- connection-reuse budget (dp_conn_reuse) ----------------------------------
+# Exact count for a warm-heavy workload with the keep-alive connection pool
+# on: repeated requests to standing endpoints, short idle timeout so conn
+# expiry + TIME_WAIT timers fire inside the horizon. A conn *hit* costs zero
+# port events (vs acquire + a 3-event port_hold process per request on the
+# no-reuse path) and expiry/TIME_WAIT are single schedule_at callbacks, so
+# the same workload with reuse OFF must process strictly MORE events — both
+# facts are pinned, so a regression that makes the pool spawn per-request
+# processes (or stop hitting) fails deterministically.
+REUSE_EVENT_BUDGET = 4_109
+REUSE_WORKLOAD = dict(n_workers=24, n_functions=8, waves=6, reqs_per_wave=4,
+                      wave_gap=1.0, horizon=14.0, seed=2024)
+
+
+def run_reuse_cell(conn_reuse: bool):
+    w = REUSE_WORKLOAD
+    env = Environment(seed=w["seed"])
+    cl = Cluster(env, n_workers=w["n_workers"], runtime="firecracker",
+                 dp_conn_reuse=conn_reuse, dp_conn_idle_timeout=2.0)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(w["n_functions"])]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="img://budget", port=80,
+            scaling=ScalingConfig(stable_window=300.0,
+                                  scale_to_zero_grace=300.0)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        for _ in range(w["waves"]):
+            # gap < idle timeout: wave k+1 reuses wave k's parked conns;
+            # the final waves' conns idle out inside the horizon
+            for n in names:
+                for _ in range(w["reqs_per_wave"]):
+                    cl.invoke(n, exec_time=0.02)
+            yield env.timeout(w["wave_gap"])
+
+    env.process(driver(env), name="reuse-budget-driver")
+    env.run(until=w["horizon"])
+    hits = sum(dp.conn_hits for dp in cl.data_planes)
+    expired = sum(dp.conn_expired for dp in cl.data_planes)
+    done = len(cl.collector.completed)
+    return env.events_processed, hits, expired, done
+
+
+def test_conn_reuse_event_budget_and_determinism():
+    a = run_reuse_cell(conn_reuse=True)
+    b = run_reuse_cell(conn_reuse=True)
+    assert a == b, "conn-reuse path broke seed-determinism"
+    events, hits, expired, done = a
+    assert done > 0, "workload did no real work"
+    assert hits > 0 and expired > 0, (
+        "the workload no longer exercises conn reuse + idle expiry — the "
+        "budget would be pinning the wrong path")
+    events_off, hits_off, _, done_off = run_reuse_cell(conn_reuse=False)
+    assert hits_off == 0 and done_off == done
+    assert events < events_off, (
+        "connection reuse stopped saving events — a hit should cost zero "
+        "port events vs acquire + port_hold per request")
+    assert events <= REUSE_EVENT_BUDGET, (
+        f"conn-reuse event budget exceeded: {events} > {REUSE_EVENT_BUDGET} "
+        f"— the keep-alive pool has probably started paying per-request "
+        f"events (see module docstring before touching the budget)")

@@ -190,6 +190,52 @@ def test_token_bucket_rate_limit(qps, burst, n):
     assert all(b >= a for a, b in zip(times, times[1:]))
 
 
+@given(fn=st.text(min_size=1, max_size=32),
+       n_dps=st.integers(1, 16), width=st.integers(1, 20))
+@settings(max_examples=80)
+def test_fn_dp_set_properties(fn, n_dps, width):
+    """fn→DP-set steering invariants: deterministic (stable_hash, so the
+    same across processes), every member drawn from the rotation without
+    duplicates, home member first, and width 1 degrades to the sole-DP
+    sticky pick."""
+    from repro.core.cluster import fn_dp_set
+    from repro.simcore import stable_hash
+    backends = list(range(n_dps))
+    members = fn_dp_set(fn, backends, width)
+    # deterministic: recomputation from the same rotation is identical
+    assert members == fn_dp_set(fn, backends, width)
+    # clamped width, all members distinct and in the rotation
+    assert len(members) == min(max(1, width), n_dps)
+    assert len(set(members)) == len(members)
+    assert set(members) <= set(backends)
+    # the home member is the sticky hash pick — width 1 IS the default path
+    home = backends[stable_hash(fn) % n_dps]
+    assert members[0] == home
+    assert fn_dp_set(fn, backends, 1) == (home,)
+
+
+@given(fn=st.text(min_size=1, max_size=16),
+       n_dps=st.integers(2, 6), width=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_steer_round_robin_covers_dp_set(fn, n_dps, width):
+    """A spread function's invocations round-robin over every member of its
+    DP-set; an unspread function always takes the sticky hash pick."""
+    from repro.simcore import stable_hash
+    env = Environment(seed=3)
+    cl = __import__("repro.core.cluster", fromlist=["Cluster"]).Cluster(
+        env, n_workers=1, n_data_planes=n_dps, dp_spread_enabled=True,
+        dp_spread_min_rate=1e9)    # never auto-widen: the table is explicit
+    members = cl.spread_function(fn, width=width)
+    picks = [cl._steer(fn).dp_id for _ in range(3 * len(members))]
+    # full coverage of the set, in set order, nothing outside it
+    assert set(picks) == set(members)
+    assert picks[:len(members)] == list(members)
+    # a function not in the table stays sticky to its sole hash-picked DP
+    other = fn + "x"
+    sticky = {cl._steer(other).dp_id for _ in range(5)}
+    assert sticky == {stable_hash(other) % n_dps}
+
+
 @given(data=st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
                                st.binary(min_size=0, max_size=64)),
                      min_size=1, max_size=30))
