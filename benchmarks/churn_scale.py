@@ -142,13 +142,26 @@ def placer_microbench(n_nodes: int, n_ops: int, use_index: bool,
 
 def churn_point(n_workers: int, rate: float, duration: float,
                 seed: int = 71, placement_policy: str = "balanced",
-                cp_shards: int = 1) -> dict:
+                cp_shards: int = 1, hb_cohort: bool = False,
+                vector_windows: bool = False) -> dict:
     """One grid cell: the scalability.py cold-start churn workload, with
-    wall-clock accounting alongside the simulated latency stats."""
+    wall-clock accounting alongside the simulated latency stats.
+
+    ``hb_cohort`` turns on the cohort heartbeat wheel (same-deadline beats
+    snap to a shared grid and pop as one event) and ``vector_windows`` the
+    array-backed metric windows — the two decision-identical fast paths that
+    make the 50k-worker cell wall-clock feasible (tests/test_vectorized.py
+    pins both against their scalar references)."""
     env = Environment(seed=seed)
+    kw = {}
+    if hb_cohort:
+        from repro.core.costmodel import DEFAULT_COSTS
+        kw["hb_cohort_quantum"] = \
+            DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
                        placement_policy=placement_policy,
-                       cp_shards=cp_shards)
+                       cp_shards=cp_shards,
+                       cp_vector_windows=vector_windows, **kw)
     plan = [(i / rate, f"f{i}", 0.05) for i in range(int(rate * duration))]
     preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
     ev0, t0 = env.events_processed, time.perf_counter()
@@ -160,6 +173,10 @@ def churn_point(n_workers: int, rate: float, duration: float,
     return {
         "workers": n_workers, "rate": rate, "duration": duration,
         "policy": placement_policy, "cp_shards": cp_shards,
+        "hb_cohort": hb_cohort, "vector_windows": vector_windows,
+        "events_per_creation": round(
+            (env.events_processed - ev0)
+            / max(cl.collector.sandbox_creations, 1), 1),
         "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
         "events": events, "events_per_wall_s": round(events / wall, 1),
         "creations": cl.collector.sandbox_creations,
@@ -392,6 +409,213 @@ def run_multi_dp(out: str = "BENCH_churn.json", smoke: bool = False) -> dict:
         result = {"meta": {"bench": "churn_scale"}}
     result["multi_dp_sweep"] = {"provenance": bench_provenance(),
                                 "cells": cells}
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
+                   duration: float = 8.0, kill_at: float = 4.0,
+                   incremental: bool = True, seed: int = 77,
+                   recovery_window: float = 2.0, n_hot: int = 16) -> dict:
+    """One ``failover_scale`` cell: leader killed mid-churn, with a live
+    fn→shard-set split and a whole-function migration in flight.
+
+    Workload: a cold-churn plan (one never-seen function per arrival, so
+    every post-recovery arrival is a creation demand) plus one capped hot
+    function (``max_scale=n_hot``, no scale-to-zero) providing standing
+    traffic whose replica count is pinned — its creation count cannot vary
+    with recovery timing, so total creations must be EQUAL between the
+    serial and incremental runs of a pair (the acceptance invariant).
+
+    Churn arrivals pause for 0.3 s before the kill so no creation is in
+    flight at the kill instant: the first ``sandbox-created`` event after
+    the kill is then a creation *initiated* by the recovering leader, and
+    time-to-first-creation cleanly decomposes into (election + replay-to-
+    first-admission + sandbox boot). Both modes pay the same election and
+    boot; what the sweep measures is the admission term — full-snapshot
+    replay (serial) vs first-shard-unit completion (incremental).
+
+    Pre-kill state the replay must handle: the hot function split across a
+    shard-set (persisted override), one churn function migrated off its
+    hash home (persisted override), and a second migration spawned 100 µs
+    before the kill — mid-quiesce, never persisted, must roll back."""
+    from repro.core.costmodel import DEFAULT_COSTS
+    env = Environment(seed=seed)
+    cl = make_dirigent(
+        env, n_workers=n_workers, runtime="firecracker",
+        cp_shards=cp_shards, enable_ha_sim=True,
+        cp_incremental_recovery=incremental,
+        cp_vector_windows=True,
+        cp_rebalance_enabled=cp_shards > 1,
+        cp_rebalance_period=1e9,          # handoffs driven explicitly below
+        cp_fn_split_enabled=cp_shards > 1,
+        hb_cohort_quantum=DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum)
+    gap = 0.3                              # pre-kill churn quiet period
+    n_churn = int(rate * (duration - gap))
+    churn_names = [f"c{i}" for i in range(n_churn)]
+    preload_functions(cl, churn_names, SWEEP_SCALING, persist=True)
+    preload_functions(cl, ["hot"],
+                      dict(SWEEP_SCALING, stable_window=4.0,
+                           scale_to_zero_grace=300.0, max_scale=n_hot),
+                      persist=True)
+    t0 = env.now
+    invs = []
+    hot_rate = 200.0
+    plan = [(j / hot_rate, "hot", 0.1)
+            for j in range(int(hot_rate * duration))]
+    t, i = 0.0, 0
+    while i < n_churn:
+        if not (kill_at - gap <= t < kill_at):
+            plan.append((t, churn_names[i], 0.05))
+            i += 1
+        t += 1.0 / rate
+    plan.sort()
+
+    def driver(env):
+        t_prev = 0.0
+        for t, fn, et in plan:
+            if t > t_prev:
+                yield env.timeout(t - t_prev)
+                t_prev = t
+            invs.append(cl.invoke(fn, exec_time=et))
+
+    ev0, w0 = env.events_processed, time.perf_counter()
+    env.process(driver(env), name="failover-driver")
+    leader = cl.control_plane_leader()
+    if cp_shards > 1:
+        env.run(until=t0 + 2.0)
+        # live split + one persisted migration for the replay to keep
+        members = tuple(range(min(4, cp_shards)))
+        env.process(leader._split_function("hot", members),
+                    name="force-split")
+        src = leader._fn_shard_id("c0")
+        dst = (src + 1) % cp_shards
+        env.process(leader._migrate_functions(
+            leader.shards[src], leader.shards[dst], ["c0"]), name="force-mig")
+        env.run(until=t0 + kill_at - 1e-4)
+        # a second migration spawned mid-quiesce: in flight at the kill,
+        # never persisted — replay must land c1 back on its hash home
+        src2 = leader._fn_shard_id("c1")
+        env.process(leader._migrate_functions(
+            leader.shards[src2], leader.shards[(src2 + 1) % cp_shards],
+            ["c1"]), name="inflight-mig")
+    env.run(until=t0 + kill_at)
+    t_kill = env.now
+    pre_creations = cl.collector.sandbox_creations
+    cl.fail_control_plane_leader()
+    env.run(until=t0 + duration + 30.0)
+    wall = time.perf_counter() - w0
+
+    col = cl.collector
+    ttfc = col.first_event_at("sandbox-created", after=t_kill)
+    recovered = col.first_event_at("cp-recovered", after=t_kill)
+    shard_ts = col.event_times("cp-shard-recovered", after=t_kill)
+    win = col.window_sched_latencies(t_kill, t_kill + recovery_window)
+    stats = latency_stats(invs, "e2e_latency")
+    return {
+        "workers": n_workers, "cp_shards": cp_shards, "rate": rate,
+        "duration": duration, "kill_at": kill_at,
+        "mode": "incremental" if (incremental and cp_shards > 1)
+                else "serial",
+        "wall_s": round(wall, 3),
+        "events": env.events_processed - ev0,
+        "creations": col.sandbox_creations,
+        "creations_pre_kill": pre_creations,
+        "fn_splits": col.fn_splits,
+        "time_to_first_creation_s": (round(ttfc - t_kill, 6)
+                                     if ttfc is not None else None),
+        "recovered_s": (round(recovered - t_kill, 6)
+                        if recovered is not None else None),
+        "first_shard_admitted_s": (round(min(shard_ts) - t_kill, 6)
+                                   if shard_ts else None),
+        "shards_recovered": len(shard_ts),
+        "recovery_window_s": recovery_window,
+        "recovery_window_n": int(win.size),
+        "recovery_window_p50_ms": (round(float(np.percentile(win, 50)) * 1e3,
+                                         3) if win.size else None),
+        "recovery_window_p99_ms": (round(float(np.percentile(win, 99)) * 1e3,
+                                         3) if win.size else None),
+        "done": stats["done"], "total": stats["total"],
+        "p99_ms": round(stats["p99"] * 1e3, 3),
+    }
+
+
+def _print_failover(cell: dict) -> None:
+    fs = cell["first_shard_admitted_s"]
+    print(f"failover workers={cell['workers']} shards={cell['cp_shards']} "
+          f"mode={cell['mode']}: "
+          f"ttfc={cell['time_to_first_creation_s']}s "
+          f"recovered={cell['recovered_s']}s "
+          f"first_shard={'-' if fs is None else f'{fs}s'} "
+          f"win_p99={cell['recovery_window_p99_ms']}ms "
+          f"creations={cell['creations']} "
+          f"done={cell['done']}/{cell['total']}", flush=True)
+
+
+def failover_cells(smoke: bool = False) -> list:
+    """(workers, shards, incremental) rows. Shard count 1 has no per-shard
+    units to parallelize — ``cp_incremental_recovery`` falls back to the
+    serial path — so it is recorded once, as the serial anchor."""
+    if smoke:
+        return [(500, 4, False), (500, 4, True)]
+    rows = []
+    for w in (5000, 20_000, 50_000):
+        rows.append((w, 1, False))
+        for s in (4, 8):
+            rows.append((w, s, False))
+            rows.append((w, s, True))
+    return rows
+
+
+def run_failover_sweep(smoke: bool = False) -> list:
+    cells = []
+    for w, s, inc in failover_cells(smoke):
+        cell = failover_point(w, s, incremental=inc)
+        cells.append(cell)
+        _print_failover(cell)
+    return cells
+
+
+def run_failover(out: str = "BENCH_churn.json", smoke: bool = False) -> dict:
+    """``--failover``: run only the failover_scale sweep and merge it into
+    the existing out-file (preserving the recorded sweeps)."""
+    cells = run_failover_sweep(smoke)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["failover_scale"] = {"provenance": bench_provenance(),
+                                "cells": cells}
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def run_scale50k(out: str = "BENCH_churn.json") -> dict:
+    """``--scale-50k``: the 50k-worker churn cells (cohort heartbeats +
+    vector windows on, plus a cohort-off companion at 20k for the
+    events/creation comparison), merged into the existing out-file."""
+    cells = [
+        churn_point(20_000, 1000, 4.0, hb_cohort=True, vector_windows=True),
+        churn_point(50_000, 1000, 4.0, hb_cohort=True, vector_windows=True),
+    ]
+    for cell in cells:
+        print(f"workers={cell['workers']} rate={cell['rate']} "
+              f"cohort={'on' if cell['hb_cohort'] else 'off'}: "
+              f"{cell['events_per_wall_s']:.0f} ev/s wall, "
+              f"{cell['events_per_creation']} events/creation, "
+              f"p99={cell['p99_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["scale_50k"] = {"provenance": bench_provenance(), "cells": cells}
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -634,6 +858,19 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
     result["multi_dp_sweep"] = {"provenance": result["meta"]["provenance"],
                                 "cells": run_multi_dp_sweep(smoke)}
 
+    # -- failover at scale (serial vs incremental leader recovery) ----------
+    result["failover_scale"] = {"provenance": result["meta"]["provenance"],
+                                "cells": run_failover_sweep(smoke)}
+
+    # -- 50k-worker cells (cohort heartbeats + vector windows) --------------
+    if not smoke:
+        result["scale_50k"] = {
+            "provenance": result["meta"]["provenance"],
+            "cells": [churn_point(20_000, 1000, 4.0, hb_cohort=True,
+                                  vector_windows=True),
+                      churn_point(50_000, 1000, 4.0, hb_cohort=True,
+                                  vector_windows=True)]}
+
     # -- live-mode smoke (real create_hook payloads; ROADMAP item) ----------
     result["live_smoke"] = cell = live_smoke_point()
     _print_live_smoke(cell)
@@ -685,6 +922,15 @@ def run(reporter, quick: bool = True) -> dict:
             f"p99_ms={cell['p99_ms']};"
             f"hot_lock_wait_s={cell['lock_wait_hottest_shard_s']};"
             f"splits={cell['fn_splits']};merges={cell['fn_merges']}")
+    for cell in result.get("failover_scale", {}).get("cells", []):
+        ttfc = cell["time_to_first_creation_s"]
+        reporter.add(
+            f"churn/failover/workers={cell['workers']}"
+            f"/shards={cell['cp_shards']}/{cell['mode']}",
+            (ttfc or 0.0) * 1e6,
+            f"recovered_s={cell['recovered_s']};"
+            f"win_p99_ms={cell['recovery_window_p99_ms']};"
+            f"creations={cell['creations']}")
     for cell in result.get("multi_dp_sweep", {}).get("cells", []):
         reporter.add(
             f"churn/multidp/rate={cell['rate']:.0f}"
@@ -707,11 +953,22 @@ if __name__ == "__main__":
     ap.add_argument("--multi-dp", action="store_true",
                     help="run only the multi-data-plane sweep and merge it "
                          "into --out (honors --smoke)")
+    ap.add_argument("--failover", action="store_true",
+                    help="run only the failover_scale sweep (leader killed "
+                         "mid-churn; serial vs incremental recovery) and "
+                         "merge it into --out (honors --smoke)")
+    ap.add_argument("--scale-50k", action="store_true",
+                    help="run only the 50k-worker churn cells (cohort "
+                         "heartbeats + vector windows) and merge into --out")
     ap.add_argument("--out", default="BENCH_churn.json")
     args = ap.parse_args()
     if args.live_smoke:
         run_live_smoke(out=args.out)
     elif args.multi_dp:
         run_multi_dp(out=args.out, smoke=args.smoke)
+    elif args.failover:
+        run_failover(out=args.out, smoke=args.smoke)
+    elif args.scale_50k:
+        run_scale50k(out=args.out)
     else:
         run_bench(smoke=args.smoke, out=args.out)

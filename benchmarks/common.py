@@ -35,19 +35,40 @@ def make_knative(env: Environment, n_workers: int = 93, **kw) -> KnativeCluster:
 
 
 def preload_functions(system, names: List[str],
-                      scaling_kw: Optional[dict] = None) -> None:
+                      scaling_kw: Optional[dict] = None,
+                      persist: bool = False) -> None:
     """Install functions directly (bypassing registration cost) for
-    microbenchmarks where registration is not the measured quantity."""
+    microbenchmarks where registration is not the measured quantity.
+
+    ``persist=True`` additionally writes the ``function/<name>`` records to
+    the durable store (draining the write log before returning) — required
+    by failover benchmarks: ``recover_as_leader`` rebuilds the registry from
+    those records, so functions preloaded without them would silently vanish
+    on the first leader kill."""
     scaling_kw = scaling_kw or {}
     if isinstance(system, Cluster):
         leader = system.control_plane_leader()
+        fns = []
         for name in names:
             fn = Fn(name=name, image_url="img://bench", port=80,
                     scaling=ScalingConfig(**scaling_kw))
             # install_function routes the record to its owning CP shard too
             leader.install_function(fn)
+            fns.append(fn)
             for dp in system.data_planes:
                 dp.sync_functions([name])
+        if persist:
+            env = system.env
+            done = env.event()
+
+            def persist_all(env):
+                for fn in fns:
+                    yield from system.store.write(f"function/{fn.name}",
+                                                  fn.persisted_record())
+                done.succeed(None)
+
+            env.process(persist_all(env), name="preload-persist")
+            env.run_until_event(done)
     else:
         for name in names:
             fn = Fn(name=name, image_url="img://bench", port=80,

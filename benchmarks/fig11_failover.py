@@ -50,23 +50,49 @@ def control_plane_failure(kind: str, fail_at: float = 300.0, seed: int = 51):
     else:
         sys_ = make_knative(env)
     preload_functions(sys_, [f.name for f in trace.functions])
+    # all horizons are relative to the instant traffic starts, not to t=0:
+    # anything that advances the clock before the driver is spawned (setup,
+    # registration) must not shift the kill relative to the trace
+    t0 = env.now
     invs = _drive(env, sys_, trace)
-    env.run(until=fail_at)
+    env.run(until=t0 + fail_at)
+    t_kill = env.now
     if kind == "dirigent":
         sys_.fail_control_plane_leader()
     else:
         sys_.fail_control_plane()
-    env.run(until=trace.duration + 120.0)
-    # recovery time: from the failure event to the leader-elected/recovered event
-    ev = {k: t for t, k, _ in sys_.collector.events
-          if k in ("leader-elected", "cp-recovered")}
-    rec_t = min((t for k, t in ev.items()), default=float("nan"))
-    timeline = _slowdown_timeline(invs, fail_at - 60, fail_at + 120)
-    pre = np.mean([v for t, v in timeline.items() if t < fail_at]) if timeline else float("nan")
+    env.run(until=t0 + trace.duration + 120.0)
+    # recovery time: failure instant -> the new leader finishing replay
+    # ("cp-recovered" is emitted once recovery completes; the boot-time
+    # election emits "leader-elected" too, so filter on the kill instant)
+    rec_t = sys_.collector.first_event_at("cp-recovered", after=t_kill) \
+        if kind == "dirigent" else None
+    if rec_t is None:
+        ev = [t for t, k, _ in sys_.collector.events
+              if k in ("leader-elected", "cp-recovered") and t >= t_kill]
+        rec_t = min(ev, default=float("nan"))
+    timeline = _slowdown_timeline(invs, t_kill - 60, t_kill + 120)
+    pre = np.mean([v for t, v in timeline.items() if t < t_kill]) if timeline else float("nan")
     post = max((v for t, v in timeline.items()
-                if fail_at <= t < fail_at + 60), default=float("nan"))
-    return {"recovery_s": rec_t - fail_at, "pre_slowdown": float(pre),
-            "peak_post_slowdown": float(post), "timeline": timeline}
+                if t_kill <= t < t_kill + 60), default=float("nan"))
+    # recovery-window view: scheduling latency of requests that arrived
+    # between the kill and recovery completion (plus a wider 60 s window —
+    # the narrow one can be empty at low rates)
+    if kind == "dirigent" and not np.isnan(rec_t):
+        win = sys_.collector.window_sched_latencies(t_kill, rec_t)
+    else:
+        win = np.array([])
+    win60 = np.array([i.scheduling_latency for i in invs
+                      if i.t_done > 0 and not i.failed
+                      and t_kill <= i.arrival < t_kill + 60.0])
+    def _p(a, q):
+        return float(np.percentile(a, q)) if a.size else float("nan")
+    return {"recovery_s": rec_t - t_kill, "pre_slowdown": float(pre),
+            "peak_post_slowdown": float(post),
+            "recovery_window_sched_p50_ms": _p(win, 50) * 1e3,
+            "recovery_window_sched_p99_ms": _p(win, 99) * 1e3,
+            "post_60s_sched_p99_ms": _p(win60, 99) * 1e3,
+            "timeline": timeline}
 
 
 def data_plane_failure(kind: str, fail_at: float = 120.0, seed: int = 52):
@@ -79,27 +105,29 @@ def data_plane_failure(kind: str, fail_at: float = 120.0, seed: int = 52):
         sys_ = make_knative(env)
     preload_functions(sys_, [f"f{i}" for i in range(30)],
                       dict(stable_window=600.0, scale_to_zero_grace=600.0))
+    t0 = env.now
     invs = []
 
     def driver(env):
         i = 0
-        while env.now < dur:
+        while env.now < t0 + dur:
             invs.append(sys_.invoke(f"f{i % 30}", exec_time=0.05))
             i += 1
             yield env.timeout(1.0 / rate)
 
     env.process(driver(env), name="driver")
-    env.run(until=fail_at)
+    env.run(until=t0 + fail_at)
+    t_kill = env.now
     if kind == "dirigent":
         sys_.fail_data_plane(0)
-        env.run(until=dur + 60)
+        env.run(until=t0 + dur + 60)
     else:
         env.process(sys_.fail_data_plane(), name="kn-dp-fail")
-        env.run(until=dur + 60)
+        env.run(until=t0 + dur + 60)
     # failure rate per second after the failure
     fail_ts = sorted(i.arrival for i in invs if i.failed)
-    last_fail = max(fail_ts, default=fail_at)
-    return {"recovery_s": last_fail - fail_at,
+    last_fail = max(fail_ts, default=t_kill)
+    return {"recovery_s": last_fail - t_kill,
             "n_failed": len(fail_ts)}
 
 
@@ -110,8 +138,10 @@ def worker_failures(kind: str, n_fail: int = 47, fail_at: float = 240.0,
     env = Environment(seed=seed)
     sys_ = (make_dirigent(env) if kind == "dirigent" else make_knative(env))
     preload_functions(sys_, [f.name for f in trace.functions])
+    t0 = env.now
     invs = _drive(env, sys_, trace)
-    env.run(until=fail_at)
+    env.run(until=t0 + fail_at)
+    fail_at = env.now
     if kind == "dirigent":
         for wid in range(n_fail):
             sys_.fail_worker_daemon(wid)
@@ -127,7 +157,7 @@ def worker_failures(kind: str, n_fail: int = 47, fail_at: float = 240.0,
                             if ep.sandbox.worker_id < n_fail]:
                     st.endpoints.pop(sid, None)
         env.process(evict(env), name="evict")
-    env.run(until=trace.duration + 120.0)
+    env.run(until=t0 + trace.duration + 120.0)
     timeline = _slowdown_timeline(invs, fail_at - 60, fail_at + 180, bucket=10.0)
     peak = max((v for t, v in timeline.items() if t >= fail_at),
                default=float("nan"))
@@ -140,7 +170,8 @@ def run(reporter, quick: bool = True) -> dict:
         r = control_plane_failure(kind)
         reporter.add(f"fig11/{kind}/cp-failover", r["recovery_s"] * 1e6,
                      f"peak_slowdown={r['peak_post_slowdown']:.2f};"
-                     f"pre={r['pre_slowdown']:.2f}")
+                     f"pre={r['pre_slowdown']:.2f};"
+                     f"win_p99_ms={r['recovery_window_sched_p99_ms']:.3f}")
         out[f"cp_{kind}"] = r
         r = data_plane_failure(kind)
         reporter.add(f"fig11/{kind}/dp-failover", r["recovery_s"] * 1e6,

@@ -35,6 +35,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List
 
+import numpy as np
+
 from repro.core.abstractions import ScalingConfig
 
 
@@ -90,13 +92,91 @@ class ConcurrencyWindow:
         return max(self.values)
 
 
+class VectorWindow:
+    """Array-backed ``ConcurrencyWindow``: same sliding-window semantics on a
+    numpy ring buffer.
+
+    A cold burst at 20k+ workers parks tens of thousands of samples per
+    function and re-averages on every urgent reconcile; the deque window pays
+    a Python-level popleft per evicted sample plus a C ``sum`` per average.
+    Here eviction is one ``np.searchsorted`` (sample times are monotone
+    non-decreasing — the DES clock only moves forward) and the average is one
+    ``ndarray.sum`` over a contiguous slice.
+
+    NOT bit-identical to the deque reference: numpy uses pairwise summation,
+    so the average can differ from sequential ``sum`` in the last float bits.
+    The autoscaler only consumes the average through ``math.ceil(avg /
+    target)``, which is insensitive to last-bit noise except exactly at
+    integer boundaries, so this class is *decision-identical* in practice and
+    is gated behind ``vectorized=True`` (default off; tests/test_vectorized.py
+    asserts decision identity on randomized streams)."""
+
+    __slots__ = ("horizon", "_t", "_v", "_lo", "_hi")
+
+    _INIT_CAP = 64
+
+    def __init__(self, horizon: float):
+        self.horizon = horizon
+        self._t = np.empty(self._INIT_CAP, dtype=np.float64)
+        self._v = np.empty(self._INIT_CAP, dtype=np.float64)
+        self._lo = 0
+        self._hi = 0
+
+    def _compact(self, need: int) -> None:
+        n = self._hi - self._lo
+        cap = self._t.shape[0]
+        if n + need > cap:
+            new_cap = max(cap * 2, n + need, self._INIT_CAP)
+            nt = np.empty(new_cap, dtype=np.float64)
+            nv = np.empty(new_cap, dtype=np.float64)
+            nt[:n] = self._t[self._lo:self._hi]
+            nv[:n] = self._v[self._lo:self._hi]
+            self._t, self._v = nt, nv
+        else:
+            self._t[:n] = self._t[self._lo:self._hi]
+            self._v[:n] = self._v[self._lo:self._hi]
+        self._lo, self._hi = 0, n
+
+    def record(self, t: float, value: float) -> None:
+        if self._hi == self._t.shape[0]:
+            self._compact(1)
+        self._t[self._hi] = t
+        self._v[self._hi] = value
+        self._hi += 1
+        self._evict(t)
+
+    def _evict(self, t: float) -> None:
+        cut = t - self.horizon
+        # samples strictly older than the cut drop out, matching the deque
+        # reference's ``times[0] < cut`` loop
+        self._lo += int(np.searchsorted(self._t[self._lo:self._hi], cut,
+                                        side="left"))
+
+    def __len__(self) -> int:
+        return self._hi - self._lo
+
+    def average(self, t: float) -> float:
+        self._evict(t)
+        n = self._hi - self._lo
+        if n == 0:
+            return 0.0
+        return float(self._v[self._lo:self._hi].sum()) / n
+
+    def max(self, t: float) -> float:
+        self._evict(t)
+        if self._hi == self._lo:
+            return 0.0
+        return float(self._v[self._lo:self._hi].max())
+
+
 class FunctionAutoscalerState:
     """Per-function autoscaler state machine."""
 
-    def __init__(self, scaling: ScalingConfig):
+    def __init__(self, scaling: ScalingConfig, vectorized: bool = False):
         self.scaling = scaling
-        self.stable = ConcurrencyWindow(scaling.stable_window)
-        self.panic = ConcurrencyWindow(scaling.panic_window)
+        win = VectorWindow if vectorized else ConcurrencyWindow
+        self.stable = win(scaling.stable_window)
+        self.panic = win(scaling.panic_window)
         self.in_panic_since: float | None = None
         self.max_panic_desired = 0
         self.zero_since: float | None = None

@@ -66,7 +66,7 @@ from repro.core.metrics import Collector
 from repro.core.persistence import SimStore
 from repro.core.request import Invocation, InvocationMode
 from repro.core.worker import WorkerDaemon
-from repro.simcore import Environment, Event, Interrupt, stable_hash
+from repro.simcore import Environment, Event, Interrupt, grid_ceil, stable_hash
 
 
 def fn_dp_set(fn: str, backends: List[int], width: int) -> tuple:
@@ -131,6 +131,10 @@ class Cluster:
                  dp_spread_min_rate: Optional[float] = None,
                  dp_conn_reuse: Optional[bool] = None,
                  dp_conn_idle_timeout: Optional[float] = None,
+                 cp_incremental_recovery: bool = True,
+                 cp_vector_windows: bool = False,
+                 cp_batched_eviction: bool = True,
+                 hb_cohort_quantum: Optional[float] = None,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
@@ -143,6 +147,11 @@ class Cluster:
             fsync_sigma=self.costs.persist_write_sigma,
             stall_prob=self.costs.persist_stall_prob,
             stall=self.costs.persist_stall)
+        # Sandbox ids are allocated from one cluster-wide counter shared by
+        # every CP replica: a freshly elected leader must not reissue ids the
+        # deposed leader already handed to workers, or its new sandboxes would
+        # silently shadow adopted ones in ``worker.sandboxes``.
+        self._sandbox_ids = itertools.count(1)
         self.control_planes: List[ControlPlane] = [
             ControlPlane(env, i, self.costs, self, self.store, self.collector,
                          persist_sandbox_state=persist_sandbox_state,
@@ -156,7 +165,10 @@ class Cluster:
                          fn_split_max_shards=cp_fn_split_max_shards,
                          fn_split_min_load=cp_fn_split_min_load,
                          fn_split_cooldown=cp_fn_split_cooldown,
-                         ep_flush_coalesce=cp_ep_flush_coalesce)
+                         ep_flush_coalesce=cp_ep_flush_coalesce,
+                         incremental_recovery=cp_incremental_recovery,
+                         vector_windows=cp_vector_windows,
+                         batched_eviction=cp_batched_eviction)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [
@@ -183,6 +195,17 @@ class Cluster:
         # partition the CP health monitors use)
         self._cp_shards = max(1, cp_shards)
         self._hb_wheels = [_HeartbeatWheel() for _ in range(self._cp_shards)]
+        # cohort mode: beat deadlines rounded UP onto a shared grid, whole
+        # same-deadline cohorts delivered per heap event (heartbeat_batch).
+        # None (default) keeps per-worker exact deadlines bit-identically;
+        # the quantum must be a power-of-two fraction of the heartbeat
+        # period so ``t + period`` stays on-grid exactly (see grid_ceil)
+        self._hb_cohort_quantum = hb_cohort_quantum
+        if hb_cohort_quantum is not None:
+            ratio = self.costs.worker_heartbeat_period / hb_cohort_quantum
+            assert ratio == int(ratio), (
+                "hb_cohort_quantum must divide worker_heartbeat_period "
+                "exactly, or cohorts drift off-grid after one beat")
         self._started = False
         # front-end LB rotation: dead DPs keep receiving traffic until the
         # keepalived health check removes them (paper §5.4 DP failover)
@@ -262,6 +285,14 @@ class Cluster:
         c = self.costs
         phase = self.env.rng(f"hb-{wid}").uniform(0, c.worker_heartbeat_period)
         first = (self.env.now + phase) + c.worker_heartbeat_period
+        if self._hb_cohort_quantum is not None:
+            # cohort mode: the first beat snaps UP to the grid; every later
+            # beat adds the (grid-multiple) period, so the worker stays in
+            # its cohort forever. A beat moves at most one quantum later
+            # than its exact instant — keep the quantum well under
+            # ``worker_heartbeat_timeout - 2*period`` so quantization alone
+            # can never push a live worker past the eviction deadline.
+            first = grid_ceil(first, self._hb_cohort_quantum)
         wheel = self._hb_wheels[wid % self._cp_shards]
         heapq.heappush(wheel.heap, (first, wid))
         if wheel.proc is None or not wheel.proc.is_alive:
@@ -275,8 +306,28 @@ class Cluster:
     def _hb_wheel_run(self, wheel: _HeartbeatWheel) -> Generator:
         env, heap = self.env, wheel.heap
         period = self.costs.worker_heartbeat_period
+        cohorts = self._hb_cohort_quantum is not None
         while True:
             while heap and heap[0][0] <= env.now:
+                if cohorts:
+                    # cohort mode: drain EVERY beat sharing this quantized
+                    # deadline in one go — heap pops with equal deadlines
+                    # come out in worker-id order (tuple comparison), and
+                    # the whole cohort becomes one heartbeat_batch call
+                    # instead of n lock reserves on the same instant
+                    t = heap[0][0]
+                    live: List[int] = []
+                    while heap and heap[0][0] == t:
+                        _, wid = heapq.heappop(heap)
+                        w = self.workers.get(wid)
+                        if w is not None and w.daemon_alive:
+                            live.append(wid)
+                        heapq.heappush(heap, (t + period, wid))
+                    if live:
+                        cp = self.control_plane_leader()
+                        if cp is not None:
+                            cp.heartbeat_batch(live)
+                    continue
                 # due beats run in (deadline, worker-id) order — bit-identical
                 # instants, deterministic tie order
                 t, wid = heapq.heappop(heap)

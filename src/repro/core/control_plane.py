@@ -233,7 +233,10 @@ class ControlPlane:
                  fn_split_max_shards: Optional[int] = None,
                  fn_split_min_load: Optional[float] = None,
                  fn_split_cooldown: Optional[float] = None,
-                 ep_flush_coalesce: Optional[bool] = None):
+                 ep_flush_coalesce: Optional[bool] = None,
+                 incremental_recovery: bool = True,
+                 vector_windows: bool = False,
+                 batched_eviction: bool = True):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -257,7 +260,11 @@ class ControlPlane:
         # repoint entries (persisted as ``shardmap/<name>`` overrides).
         self.fn_shard_table: Dict[str, int] = {}
         self.placer = self._make_placer()
-        self._sandbox_ids = itertools.count(1)
+        # Share the cluster-wide sandbox id counter so ids stay unique across
+        # leader epochs (a new leader must not reuse ids already adopted from
+        # the deposed one). Standalone CPs fall back to a private counter.
+        self._sandbox_ids = getattr(cluster, "_sandbox_ids", None) \
+            or itertools.count(1)
         self._loops = []
         self.no_downscale_until = 0.0
         # load-adaptive rebalancing knobs (resolved against the cost model;
@@ -299,6 +306,24 @@ class ControlPlane:
                                   else ep_flush_coalesce)
         self._ep_flush_pending: List[ControlPlaneShard] = []
         self._ep_flush_scheduled = False
+        # incremental failover recovery (recover_as_leader): rebuild the CP
+        # per shard, admitting each shard's traffic as its unit completes
+        # instead of gating on the full serial replay. A single shard has
+        # nothing to parallelize — it takes the serial path.
+        self.incremental_recovery = bool(incremental_recovery)
+        # array-backed (numpy) autoscaler windows: decision-identical to the
+        # deque reference but not bit-identical (pairwise vs sequential
+        # summation), so off by default (tests/test_vectorized.py)
+        self.vector_windows = bool(vector_windows)
+        # batched eviction reconcile: one pass over the functions the dead
+        # worker actually hosted instead of every function the owning shard
+        # autoscales (legacy path kept as the decision reference)
+        self.batched_eviction = bool(batched_eviction)
+        # shard ids still replaying after a failover: traffic to them is not
+        # admitted yet (urgent reconciles are deferred to the shard's own
+        # autoscale loop, which starts at admission)
+        self._recovering_shards: set = set()
+        self._recovery_barrier = None
 
     # -- shard routing ---------------------------------------------------------------
     def _default_shard_id(self, name: str) -> int:
@@ -372,13 +397,23 @@ class ControlPlane:
     def start_leader(self) -> None:
         self.is_leader = True
         self._loops = []
+        self._recovering_shards = set()
         for shard in self.shards:
-            self._loops.append(self.env.process(
-                self._autoscale_loop(shard),
-                name=f"cp{self.cp_id}-autoscale-{shard.shard_id}"))
-            self._loops.append(self.env.process(
-                self._health_loop(shard),
-                name=f"cp{self.cp_id}-health-{shard.shard_id}"))
+            self._start_shard_loops(shard)
+        self._start_global_loops()
+
+    def _start_shard_loops(self, shard: ControlPlaneShard) -> None:
+        """Admit one shard: start its autoscale + health loops. Called for
+        every shard by ``start_leader``, and per shard by the incremental
+        recovery units as each finishes its replay."""
+        self._loops.append(self.env.process(
+            self._autoscale_loop(shard),
+            name=f"cp{self.cp_id}-autoscale-{shard.shard_id}"))
+        self._loops.append(self.env.process(
+            self._health_loop(shard),
+            name=f"cp{self.cp_id}-health-{shard.shard_id}"))
+
+    def _start_global_loops(self) -> None:
         if self.rebalance_enabled or self.fn_split_enabled:
             # the split/merge escalation rides the rebalancer tick; enabling
             # either mechanism starts the loop (each stays gated inside it)
@@ -392,6 +427,12 @@ class ControlPlane:
         for p in self._loops:
             p.kill()
         self._loops = []
+        self._recovering_shards = set()
+        barrier = getattr(self, "_recovery_barrier", None)
+        if barrier is not None:
+            self._recovery_barrier = None
+            if not barrier.triggered:
+                barrier.succeed(None)
         for shard in self.shards:
             shard.ep_updates.clear()
         self._ep_flush_pending.clear()
@@ -402,7 +443,8 @@ class ControlPlane:
         owning shard, with no modeled cost (registration bypass for
         benchmarks / recovery)."""
         st = FunctionState(function=fn,
-                           autoscaler=FunctionAutoscalerState(fn.scaling))
+                           autoscaler=FunctionAutoscalerState(
+                               fn.scaling, vectorized=self.vector_windows))
         k = self.fn_shard_table.setdefault(fn.name,
                                            self._default_shard_id(fn.name))
         if type(k) is not int:
@@ -473,6 +515,13 @@ class ControlPlane:
             return
         st.autoscaler.record_metric(self.env.now, float(inflight))
         if urgent:
+            if (self._recovering_shards
+                    and self._fn_shard_id(fn) in self._recovering_shards):
+                # mid-recovery: the owning shard has not been admitted yet
+                # (its workers may still be replaying — acting now would
+                # place against a partial view). Its autoscale loop starts
+                # at admission and consumes the window recorded above.
+                return
             # Event-driven fast path: a queue formed with zero free slots.
             yield from self._reconcile_function(fn, st)
 
@@ -534,6 +583,38 @@ class ControlPlane:
             finally:
                 lock.release()
         self.env.process(hb(self.env), name="hb-touch")
+
+    def heartbeat_batch(self, worker_ids: List[int]) -> None:
+        """Cohort heartbeat (cluster ``hb_cohort_quantum``): the heartbeat
+        wheel delivers every beat sharing one quantized deadline as a single
+        call, in worker-id order. All ids belong to one CP shard (the wheel
+        is per shard), so the C9 contention model becomes ONE contiguous
+        lock hold of ``n × cp_heartbeat_lock_hold`` — the same total lock
+        time a creation can collide with, without n individual reserves
+        landing on the same instant and exploding into n fallback
+        sub-processes."""
+        if not self.alive or not worker_ids:
+            return
+        now = self.env.now
+        shard = self._worker_shard(worker_ids[0])
+        hb_map = shard.worker_last_hb
+        for wid in worker_ids:
+            hb_map[wid] = now
+        hold = self.costs.cp_heartbeat_lock_hold * len(worker_ids)
+        lock = shard.scale_lock
+        if lock.reserve(now + hold):
+            return
+
+        def hb(env):
+            t0 = env.now
+            yield lock.acquire()
+            shard.lock_wait_s += env.now - t0
+            try:
+                # simlint: ok(held-lock-timeout): modeled C9 cohort hold
+                yield env.timeout(hold)
+            finally:
+                lock.release()
+        self.env.process(hb(self.env), name="hb-batch")
 
     # -- autoscaling ------------------------------------------------------------------------
     def _autoscale_loop(self, shard: ControlPlaneShard) -> Generator:
@@ -862,6 +943,12 @@ class ControlPlane:
             # sandbox finish before the worker dismantles it
             def drain_then_kill(env, worker=worker, sid=sb.sandbox_id):
                 yield env.timeout(self.costs.teardown_drain_grace)
+                if not (self.alive and self.is_leader):
+                    # the kill RPC was never sent: the CP died (or was
+                    # deposed) during the drain grace. The sandbox stays up
+                    # at the worker; the next leader re-adopts it from the
+                    # worker push and owns its lifecycle from there.
+                    return
                 yield from worker.kill_sandbox(sid)
             self.env.process(drain_then_kill(self.env),
                              name=f"kill-{sb.key}")
@@ -999,9 +1086,32 @@ class ControlPlane:
         self.collector.event(self.env.now, "worker-evicted", wid)
         # re-run autoscaling promptly to replace lost capacity: own functions
         # inline in the health loop (pre-shard behavior when cp_shards == 1)...
-        for fn, st in list(shard.functions.items()):
-            yield from self._reconcile_function(fn, st,
-                                                shard_id=shard.shard_id)
+        if self.batched_eviction:
+            # ...batched: one pass over the own-shard functions that actually
+            # lost a replica, in eviction-scan order. Unaffected functions
+            # gain nothing from an early reconcile (their replica set did not
+            # change; the shard's own autoscale loop covers them), and at
+            # 20k+ workers an eviction storm must not re-reconcile every
+            # function the shard owns once per dead worker.
+            own_affected: List[str] = []
+            seen_own: set = set()
+            for fn, _sid, slice_shard in affected:
+                owner_id = (slice_shard if slice_shard is not None
+                            else self._fn_shard_id(fn))
+                if owner_id == shard.shard_id and fn not in seen_own:
+                    seen_own.add(fn)
+                    own_affected.append(fn)
+            for fn in own_affected:
+                st = shard.functions.get(fn)
+                if st is not None:
+                    yield from self._reconcile_function(fn, st,
+                                                        shard_id=shard.shard_id)
+        else:
+            # legacy reference path: reconcile every own-shard function
+            # (tests/test_vectorized.py pins decision identity against it)
+            for fn, st in list(shard.functions.items()):
+                yield from self._reconcile_function(fn, st,
+                                                    shard_id=shard.shard_id)
         # ...affected foreign-owned functions (cross-shard capacity spills)
         # via explicit targeted fan-out; everything else is covered by each
         # shard's own autoscale loop
@@ -1407,10 +1517,35 @@ class ControlPlane:
         shard's function/worker maps from the persisted records — including
         the shard indirection table: install seeds hash defaults, then the
         persisted ``shardmap/`` overrides are replayed so a failover does not
-        silently undo the rebalancer's migrations."""
+        silently undo the rebalancer's migrations.
+
+        The replay itself is *costed per record* (``cp_cross_shard_op`` per
+        function / override / worker — each is an in-memory state-machine
+        step): at 20k workers the rebuild is tens of milliseconds of real
+        work, not a free dict comprehension. Two shapes:
+
+        * **serial** (``incremental_recovery=False``, or a single shard):
+          one pass replays everything, then every shard is admitted at once
+          — the pre-incremental behavior, kept as the baseline the
+          ``failover_scale`` sweep measures against.
+        * **incremental** (default, ``cp_shards > 1``): the snapshot read
+          below bounds the replay, then one recovery *unit per shard*
+          replays that shard's slice of the snapshot concurrently and admits
+          the shard (health + autoscale loops, worker merges) the moment its
+          own slice is rebuilt — traffic to shard k never waits for shard
+          j's replay. Function replay completes on every unit before any
+          worker merge starts (a barrier), so pushed sandbox lists never
+          race a half-built function table.
+        """
         c = self.costs
         yield self.env.timeout(c.cp_recovery_db_fetch)
+        # one consistent snapshot bounds the replay: everything written
+        # after this point belongs to the new leader's own epoch and is
+        # handled by the live loops, not the recovery units
         func_records = yield from self.store.read_prefix("function/")
+        shardmap: Dict[str, object] = {}
+        if self.rebalance_enabled or self.fn_split_enabled:
+            shardmap = yield from self.store.read_prefix("shardmap/")
         worker_records = yield from self.store.read_prefix("worker/")
         self.functions = {}
         self.fn_shard_table = {}
@@ -1418,79 +1553,252 @@ class ControlPlane:
         for shard in self.shards:
             shard.functions = {}
             shard.worker_last_hb = {}
-        for key, rec in func_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
-            self.install_function(Function.from_record(rec))
-        if self.rebalance_enabled or self.fn_split_enabled:
-            shardmap = yield from self.store.read_prefix("shardmap/")
-            for key, rec in shardmap.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
-                name = key.split("/", 1)[1]
-                st = self.functions.get(name)
-                if st is None:
-                    continue
-                try:
-                    text = rec.decode()
-                except AttributeError:
-                    continue
-                if "," in text:
-                    # shard-set override: the function was split — rebuild
-                    # the slices (empty; sandboxes are adopted as the
-                    # workers push them back) so failover keeps the split
-                    try:
-                        ids = tuple(int(x) for x in text.split(","))
-                    except ValueError:
-                        continue
-                    if (len(ids) < 2 or len(set(ids)) != len(ids)
-                            or not all(0 <= k < self.cp_shards
-                                       for k in ids)):
-                        continue
-                    cur = self._fn_shard_id(name)
-                    self.shards[cur].functions.pop(name, None)
-                    st.slices = {k: FunctionSlice(shard_id=k) for k in ids}
-                    st.rr_cursor = 0
-                    st.targets_t = -1.0
-                    # slices replay with zero heat (real creations refill
-                    # it); without the cooldown the first rebalance tick
-                    # would merge the split right back — failover must KEEP
-                    # splits, with the same hysteresis a fresh split gets
-                    st.split_cooldown_until = (self.env.now
-                                               + self.fn_split_cooldown)
-                    for k in ids:
-                        self.shards[k].functions[name] = st
-                    self.fn_shard_table[name] = ids
-                    self._split_fns.add(name)
-                    continue
-                try:
-                    dst = int(text)
-                except ValueError:
-                    continue
-                if not 0 <= dst < self.cp_shards:
-                    continue
-                cur = self._fn_shard_id(name)
-                if dst != cur:
-                    self.shards[cur].functions.pop(name, None)
-                    self.shards[dst].functions[name] = st
-                self.fn_shard_table[name] = dst
         self.workers = {}
         self.placer = self._make_placer()
+        # post-recovery: hold downscaling for one autoscaling window
+        self.no_downscale_until = self.env.now + c.recovery_no_downscale
+        if self.incremental_recovery and self.cp_shards > 1:
+            yield from self._recover_incremental(func_records, shardmap,
+                                                 worker_records)
+        else:
+            yield from self._recover_serial(func_records, shardmap,
+                                            worker_records)
+
+    def _replay_shardmap_override(self, key: str, rec) -> None:
+        """Re-apply one persisted ``shardmap/<fn>`` override (an ``int`` sole
+        owner or a comma-separated shard-set) to the freshly installed
+        table. Malformed or out-of-range records are ignored — the hash
+        default stands."""
+        name = key.split("/", 1)[1]
+        st = self.functions.get(name)
+        if st is None:
+            return
+        try:
+            text = rec.decode()
+        except AttributeError:
+            return
+        if "," in text:
+            # shard-set override: the function was split — rebuild the
+            # slices (empty; sandboxes are adopted as the workers push them
+            # back) so failover keeps the split
+            try:
+                ids = tuple(int(x) for x in text.split(","))
+            except ValueError:
+                return
+            if (len(ids) < 2 or len(set(ids)) != len(ids)
+                    or not all(0 <= k < self.cp_shards for k in ids)):
+                return
+            cur = self._fn_shard_id(name)
+            self.shards[cur].functions.pop(name, None)
+            st.slices = {k: FunctionSlice(shard_id=k) for k in ids}
+            st.rr_cursor = 0
+            st.targets_t = -1.0
+            # slices replay with zero heat (real creations refill it);
+            # without the cooldown the first rebalance tick would merge the
+            # split right back — failover must KEEP splits, with the same
+            # hysteresis a fresh split gets
+            st.split_cooldown_until = self.env.now + self.fn_split_cooldown
+            for k in ids:
+                self.shards[k].functions[name] = st
+            self.fn_shard_table[name] = ids
+            self._split_fns.add(name)
+            return
+        try:
+            dst = int(text)
+        except ValueError:
+            return
+        if not 0 <= dst < self.cp_shards:
+            return
+        cur = self._fn_shard_id(name)
+        if dst != cur:
+            self.shards[cur].functions.pop(name, None)
+            self.shards[dst].functions[name] = st
+        self.fn_shard_table[name] = dst
+
+    def _install_recovered_worker(self, info: WorkerNodeInfo) -> None:
+        self.workers[info.worker_id] = info
+        self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] \
+            = self.env.now
+        self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
+                             info.mem_capacity_mb)
+
+    def _recover_serial(self, func_records, shardmap,
+                        worker_records) -> Generator:
+        """Single-pass replay: everything rebuilt, then every shard admitted
+        at once (the pre-incremental shape, with the replay now costed)."""
+        c = self.costs
+        n_replay = len(func_records) + len(shardmap) + len(worker_records)
+        if n_replay:
+            yield self.env.timeout(c.cp_cross_shard_op * n_replay)
+        for key, rec in func_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+            self.install_function(Function.from_record(rec))
+        for key, rec in shardmap.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+            self._replay_shardmap_override(key, rec)
         for key, rec in worker_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
-            info = WorkerNodeInfo.from_record(rec)
-            self.workers[info.worker_id] = info
-            self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] \
-                = self.env.now
-            self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
-                                 info.mem_capacity_mb)
+            self._install_recovered_worker(WorkerNodeInfo.from_record(rec))
         # sync DP caches with the function list
         yield self.env.timeout(c.cp_recovery_dp_sync)
         names = list(self.functions.keys())  # simlint: ok(dict-iteration): install order is deterministic
         for dp in self.cluster.data_planes_alive():
             dp.sync_functions(names)
-        # post-recovery: hold downscaling for one autoscaling window
-        self.no_downscale_until = self.env.now + c.recovery_no_downscale
         self.start_leader()
+        self.collector.event(self.env.now, "cp-recovered", self.cp_id)
         # async: workers push their sandbox lists; merge as they arrive
         for wid in list(self.workers.keys()):  # simlint: ok(dict-iteration): registration order is deterministic
             self.env.process(self._merge_worker_sandboxes(wid),
                              name=f"merge-{wid}")
+
+    def _recover_incremental(self, func_records, shardmap,
+                             worker_records) -> Generator:
+        """Per-shard recovery units over one bounded snapshot.
+
+        The snapshot is bucketed by *post-override* owner up front (pure
+        arithmetic; the per-record cost is charged inside each unit), so a
+        unit replays exactly its own slice: its functions (overrides
+        included), then — after the cross-unit function barrier — its
+        workers, then admission. Leadership is taken immediately: creations
+        the units trigger must pass the leadership checks, while urgent
+        metric pushes for a still-recovering shard are deferred
+        (``receive_metric``) until that shard is admitted."""
+        # resolve final ownership before spawning units: an override's
+        # destination unit must install the function, or a unit racing the
+        # override replay could install then lose it mid-flight
+        home_of: Dict[str, object] = {}
+        fn_objs: List[Function] = []
+        for key, rec in func_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+            fn = Function.from_record(rec)
+            fn_objs.append(fn)
+            home_of[fn.name] = self._default_shard_id(fn.name)
+        overrides_by_fn: Dict[str, object] = {}
+        for key, rec in shardmap.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+            name = key.split("/", 1)[1]
+            if name not in home_of:
+                continue
+            parsed = self._parse_shardmap_override(rec)
+            if parsed is None:
+                continue
+            if type(parsed) is int:
+                if not 0 <= parsed < self.cp_shards:
+                    continue
+            elif not all(0 <= k < self.cp_shards for k in parsed):
+                continue
+            overrides_by_fn[name] = parsed
+            home_of[name] = parsed if type(parsed) is int else parsed[0]
+        fns_by_shard: List[List[Function]] = [[] for _ in self.shards]
+        for fn in fn_objs:
+            h = home_of[fn.name]
+            fns_by_shard[h if type(h) is int else h[0]].append(fn)
+        workers_by_shard: List[List[WorkerNodeInfo]] = [[] for _ in self.shards]
+        for key, rec in worker_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+            info = WorkerNodeInfo.from_record(rec)
+            workers_by_shard[info.worker_id % self.cp_shards].append(info)
+        self.is_leader = True
+        self._loops = []
+        self._recovering_shards = set(range(self.cp_shards))
+        barrier_state = {"pending": self.cp_shards}
+        barrier = self.env.event()
+        # stop() releases the barrier: a leader deposed mid-replay has its
+        # units killed, and the elector's thread (blocked below) must not
+        # hang forever on a barrier no unit will ever complete
+        self._recovery_barrier = barrier
+        for shard in self.shards:
+            self._loops.append(self.env.process(
+                self._recover_shard_unit(
+                    shard, fns_by_shard[shard.shard_id], overrides_by_fn,
+                    workers_by_shard[shard.shard_id], barrier_state, barrier),
+                name=f"cp{self.cp_id}-recover-{shard.shard_id}"))
+        # the leader's own thread waits for the function table to be whole,
+        # then syncs the DP caches; worker replay + admission continue in
+        # the units behind it
+        yield barrier
+        self._recovery_barrier = None
+        if not (self.alive and self.is_leader):
+            return      # deposed mid-replay: stop() released the barrier
+        yield self.env.timeout(self.costs.cp_recovery_dp_sync)
+        names = list(self.functions.keys())  # simlint: ok(dict-iteration): unit replay order is deterministic
+        for dp in self.cluster.data_planes_alive():
+            dp.sync_functions(names)
+
+    @staticmethod
+    def _parse_shardmap_override(rec):
+        """Validated override payload: an ``int`` destination, a tuple
+        shard-set, or ``None`` for a malformed record. Mirrors
+        ``_replay_shardmap_override``'s acceptance rules (range checks need
+        ``cp_shards`` and happen at apply time)."""
+        try:
+            text = rec.decode()
+        except AttributeError:
+            return None
+        if "," in text:
+            try:
+                ids = tuple(int(x) for x in text.split(","))
+            except ValueError:
+                return None
+            if len(ids) < 2 or len(set(ids)) != len(ids):
+                return None
+            return ids
+        try:
+            return int(text)
+        except ValueError:
+            return None
+
+    def _recover_shard_unit(self, shard: ControlPlaneShard,
+                            fns: List[Function], overrides_by_fn: Dict,
+                            workers: List[WorkerNodeInfo],
+                            barrier_state: Dict, barrier) -> Generator:
+        """One shard's recovery unit: replay functions homed here (overrides
+        included), wait for every other unit's function replay, replay this
+        shard's workers, then admit the shard."""
+        c = self.costs
+        n_fn_work = len(fns) + sum(1 for fn in fns
+                                   if fn.name in overrides_by_fn)
+        if n_fn_work:
+            yield self.env.timeout(c.cp_cross_shard_op * n_fn_work)
+        for fn in fns:
+            st = FunctionState(function=fn,
+                               autoscaler=FunctionAutoscalerState(
+                                   fn.scaling,
+                                   vectorized=self.vector_windows))
+            self.functions[fn.name] = st
+            # overrides_by_fn entries were range-validated at bucketing time
+            ov = overrides_by_fn.get(fn.name)
+            if ov is not None and type(ov) is not int:
+                st.slices = {k: FunctionSlice(shard_id=k) for k in ov}
+                st.rr_cursor = 0
+                st.targets_t = -1.0
+                st.split_cooldown_until = (self.env.now
+                                           + self.fn_split_cooldown)
+                for k in ov:
+                    self.shards[k].functions[fn.name] = st
+                self.fn_shard_table[fn.name] = ov
+                self._split_fns.add(fn.name)
+                continue
+            dst = ov if ov is not None else self._default_shard_id(fn.name)
+            self.fn_shard_table[fn.name] = dst
+            self.shards[dst].functions[fn.name] = st
+        # barrier: worker merges (pushed sandbox lists) anywhere must see a
+        # complete function table, or recovered replicas of a function homed
+        # on a slower shard would be silently skipped and re-created
+        barrier_state["pending"] -= 1
+        if barrier_state["pending"] == 0:
+            barrier.succeed(None)
+        else:
+            yield barrier
+        if workers:
+            yield self.env.timeout(c.cp_cross_shard_op * len(workers))
+        for info in workers:
+            self._install_recovered_worker(info)
+        # admit this shard: health + autoscale loops from here on
+        self._start_shard_loops(shard)
+        self._recovering_shards.discard(shard.shard_id)
+        self.collector.event(self.env.now, "cp-shard-recovered",
+                             (self.cp_id, shard.shard_id))
+        for info in workers:
+            self.env.process(self._merge_worker_sandboxes(info.worker_id),
+                             name=f"merge-{info.worker_id}")
+        if not self._recovering_shards:
+            self._start_global_loops()
+            self.collector.event(self.env.now, "cp-recovered", self.cp_id)
 
     def _merge_worker_sandboxes(self, wid: int) -> Generator:
         yield self.env.timeout(self.costs.grpc_call)

@@ -210,6 +210,20 @@ class DirigentCosts:
     # -- heartbeats / failure detection --------------------------------------
     worker_heartbeat_period: float = 0.5
     worker_heartbeat_timeout: float = 1.5
+    worker_hb_cohort_quantum: float = 0.0078125  # = period/64 (2^-7, exact
+    #                                    binary float): the grid beat
+    #                                    deadlines snap to when the cluster
+    #                                    opts into cohort heartbeats
+    #                                    (``Cluster(hb_cohort_quantum=...)``,
+    #                                    off by default). At 50k workers / 8
+    #                                    shards a full cohort's contiguous
+    #                                    lock hold is ~6250/64 × 12 µs ≈
+    #                                    1.2 ms — bounded latency distortion
+    #                                    — while beats collapse ~64× fewer
+    #                                    heap events per period. Must divide
+    #                                    worker_heartbeat_period exactly and
+    #                                    stay far under
+    #                                    worker_heartbeat_timeout - 2×period.
     raft_heartbeat_period: float = 0.002
     raft_election_timeout: float = 0.006   # C10: ~10 ms total CP failover
     raft_election_cost: float = 0.001

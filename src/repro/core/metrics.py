@@ -65,6 +65,27 @@ class Collector:
         return np.array([i.e2e_latency for i in self.completed
                          if i.arrival >= warmup], dtype=np.float64)
 
+    def event_times(self, kind: str, after: float = 0.0) -> List[float]:
+        """Timestamps of every recorded ``kind`` event at or after ``after``
+        (failover analysis: creation timelines, recovery milestones)."""
+        return [t for t, k, _ in self.events if k == kind and t >= after]
+
+    def first_event_at(self, kind: str, after: float = 0.0) -> Optional[float]:
+        """Instant of the first ``kind`` event at or after ``after``; ``None``
+        if it never happened. ``first_event_at("sandbox-created", t_kill)``
+        is the failover benchmark's time-to-first-creation probe."""
+        for t, k, _ in self.events:
+            if k == kind and t >= after:
+                return t
+        return None
+
+    def window_sched_latencies(self, t0: float, t1: float) -> np.ndarray:
+        """Scheduling latencies of completed invocations that *arrived*
+        inside ``[t0, t1)`` — the recovery-window view: requests landing
+        between leader kill and full recovery, wherever they finish."""
+        return np.array([i.scheduling_latency for i in self.completed
+                         if t0 <= i.arrival < t1], dtype=np.float64)
+
     def per_function_mean_sched(self, warmup: float = 0.0) -> Dict[str, float]:
         acc: Dict[str, List[float]] = defaultdict(list)
         for i in self.completed:

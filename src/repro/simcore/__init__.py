@@ -8,6 +8,7 @@ from repro.simcore.engine import (
     RngStream,
     Store,
     Timeout,
+    grid_ceil,
     stable_hash,
 )
 from repro.simcore.sanitize import SanitizeError, Sanitizer
@@ -24,5 +25,6 @@ __all__ = [
     "Sanitizer",
     "Store",
     "Timeout",
+    "grid_ceil",
     "stable_hash",
 ]

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import os
 import zlib
 from collections import deque
@@ -510,6 +511,19 @@ def stable_hash(name: str) -> int:
     """Process-independent string hash (builtin ``hash`` is salted per
     process and must never feed simulation state)."""
     return zlib.crc32(name.encode()) & 0x7FFFFFFF
+
+
+def grid_ceil(x: float, quantum: float) -> float:
+    """Smallest multiple of ``quantum`` that is ``>= x``.
+
+    Deadline quantization for cohort scheduling (the heartbeat wheel's
+    ``hb_cohort_quantum``): timers rounded UP onto one shared grid collapse
+    into cohorts that pop in a single heap event. With a power-of-two
+    quantum (e.g. ``0.0078125 == 2**-7``) both the division and the final
+    multiply are exact float operations, so grid points accumulated as
+    ``t + k*period`` (period itself a multiple of the quantum) stay ON the
+    grid bit-exactly — cohorts never drift apart."""
+    return math.ceil(x / quantum) * quantum
 
 
 class Environment:

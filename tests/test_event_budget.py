@@ -195,3 +195,67 @@ def test_conn_reuse_event_budget_and_determinism():
         f"conn-reuse event budget exceeded: {events} > {REUSE_EVENT_BUDGET} "
         f"— the keep-alive pool has probably started paying per-request "
         f"events (see module docstring before touching the budget)")
+
+
+# -- recovery budget (incremental leader failover) ----------------------------
+# Exact count for a fixed failover workload: standing traffic on a 4-shard
+# CP, leader killed mid-run, incremental per-shard recovery replays the
+# snapshot and re-admits traffic shard by shard. The replay itself is
+# work-proportional — O(functions + overrides + workers) timeouts costed at
+# ``cp_cross_shard_op`` — so the budget catches a recovery path that starts
+# paying per-sandbox or per-heartbeat events during replay. The
+# ``cp-shard-recovered`` count doubles as proof the *incremental* path (not
+# the serial fallback) is the one being pinned.
+RECOVERY_EVENT_BUDGET = 14_931
+RECOVERY_WORKLOAD = dict(n_workers=32, cp_shards=4, n_functions=16,
+                         kill_at=6.0, horizon=14.0, seed=2024)
+
+
+def run_recovery_cell():
+    w = RECOVERY_WORKLOAD
+    env = Environment(seed=w["seed"])
+    cl = Cluster(env, n_workers=w["n_workers"], runtime="firecracker",
+                 cp_shards=w["cp_shards"], enable_ha_sim=True)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(w["n_functions"])]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="img://budget", port=80,
+            scaling=ScalingConfig(stable_window=30.0,
+                                  scale_to_zero_grace=30.0)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        while True:
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(0.5)
+
+    env.process(driver(env), name="recovery-budget-driver")
+    env.run(until=w["kill_at"])
+    cl.fail_control_plane_leader()
+    env.run(until=w["horizon"])
+    shard_recoveries = len(
+        cl.collector.event_times("cp-shard-recovered", after=w["kill_at"]))
+    recovered = cl.collector.first_event_at("cp-recovered",
+                                            after=w["kill_at"])
+    return (env.events_processed, cl.collector.sandbox_creations,
+            shard_recoveries, recovered)
+
+
+def test_recovery_event_budget_and_determinism():
+    a = run_recovery_cell()
+    b = run_recovery_cell()
+    assert a == b, "failover recovery broke seed-determinism"
+    events, creations, shard_recoveries, recovered = a
+    assert creations > 0, "workload did no real work"
+    assert shard_recoveries == RECOVERY_WORKLOAD["cp_shards"], (
+        "the incremental per-shard recovery path did not engage — the "
+        "budget would be pinning the serial fallback")
+    assert recovered is not None, "new leader never finished recovery"
+    assert events <= RECOVERY_EVENT_BUDGET, (
+        f"recovery event budget exceeded: {events} > {RECOVERY_EVENT_BUDGET} "
+        f"— replay has probably started paying per-sandbox or O(n_workers) "
+        f"events (see module docstring before touching the budget)")

@@ -239,6 +239,267 @@ def test_filestore_torn_tail_write(tmp_path):
     st2.close()
 
 
+# -- failover fault-injection matrix ------------------------------------------
+# Leader killed in the middle of every multi-step choreography the CP runs
+# (split handoff, rebalance quiesce, scale-down teardown), plus compound
+# failures (DP crash during CP recovery) and the deposed leader racing the
+# new leader's replay. Every scenario must end *converged*: indirection
+# table ↔ shard maps ↔ slices agree, no sandbox is adopted twice, CP state
+# matches what the workers actually run, and the durable overrides match
+# the table. All run with cp_shards=4 so the incremental per-shard recovery
+# path (the PR 8 default) is what is being stressed.
+
+LONG_SCALING = dict(stable_window=300, scale_to_zero_grace=300)
+
+
+def make_sharded(seed=2, **kw):
+    kw.setdefault("cp_shards", 4)
+    kw.setdefault("n_workers", 16)
+    return make_cluster(seed=seed, **kw)
+
+
+def assert_converged(cl, leader):
+    """Post-failover convergence invariants (quiesced cluster: callers run
+    past boot/teardown transients first)."""
+    # 1. indirection table ↔ per-shard function maps ↔ slices
+    owned = {}
+    for shard in leader.shards:
+        for n in shard.functions:
+            owned.setdefault(n, []).append(shard.shard_id)
+    for n, st in leader.functions.items():
+        ids = leader._fn_shard_ids(n)
+        assert sorted(owned.get(n, [])) == sorted(ids), \
+            f"{n}: shard maps {owned.get(n)} vs table {ids}"
+        if st.slices is None:
+            assert len(ids) == 1
+        else:
+            assert set(st.slices) == set(ids)
+            # 2. every slice-owned sandbox exists globally; none owned twice
+            seen = set()
+            for sl in st.slices.values():
+                assert sl.sandbox_ids <= set(st.sandboxes), \
+                    f"{n}: slice {sl.shard_id} owns unknown sandboxes"
+                assert not (sl.sandbox_ids & seen), \
+                    f"{n}: sandbox adopted into two slices"
+                seen |= sl.sandbox_ids
+    # 3. CP sandbox state matches the workers (no phantom or double-adopted
+    # replicas — sandbox ids are globally unique, so each may appear under
+    # exactly one function)
+    seen_sids = set()
+    for n, st in leader.functions.items():
+        for sid, sb in st.sandboxes.items():
+            assert sid not in seen_sids, f"sandbox {sid} adopted twice"
+            seen_sids.add(sid)
+            w = cl.workers[sb.worker_id]
+            if w.daemon_alive:
+                assert sid in w.sandboxes, \
+                    f"{n}: CP believes in sandbox {sid} the worker lost"
+    # 4. placer accounting: used capacity == what the adopted sandboxes
+    # plus in-flight creations actually hold
+    expected = {}
+    for st in leader.functions.values():
+        cpu = st.function.scaling.cpu_req_millis
+        for sb in st.sandboxes.values():
+            expected[sb.worker_id] = expected.get(sb.worker_id, 0) + cpu
+    inflight = sum(st.creating for st in leader.functions.values())
+    inflight += sum(sl.creating for st in leader.functions.values()
+                    if st.slices for sl in st.slices.values())
+    if inflight == 0:
+        for wid, node in leader.placer.nodes.items():
+            assert node.cpu_used == expected.get(wid, 0), \
+                f"worker {wid}: placer says {node.cpu_used}, " \
+                f"sandboxes account for {expected.get(wid, 0)}"
+    # 5. durable shardmap overrides match the live table
+    for key, rec in cl.store.peek_prefix("shardmap/").items():
+        name = key.split("/", 1)[1]
+        if rec is None or name not in leader.functions:
+            continue
+        text = rec.decode()
+        want = (tuple(int(x) for x in text.split(","))
+                if "," in text else int(text))
+        assert leader.fn_shard_table[name] == want, \
+            f"{name}: table {leader.fn_shard_table[name]} vs durable {want}"
+
+
+@pytest.mark.parametrize("kill_at,survives", [
+    # inside the quiesce hold: the handoff aborts at its leadership check —
+    # nothing published, nothing persisted, replay rebuilds unsplit
+    (1e-6, False),
+    # after publish, mid-persist: the override write was initiated while
+    # still leader, so it commits durably — replay must KEEP the split and
+    # re-adopt the pushed sandboxes into slices
+    (2e-4, True),
+])
+def test_leader_killed_mid_split_handoff(kill_at, survives):
+    """The split handoff (quiesce subshard locks → slice → publish →
+    persist) dies with the leader partway through; whichever side of the
+    durable write the kill lands on, the new leader must rebuild a
+    consistent view from the records that DID persist."""
+    env, cl = make_sharded(cp_fn_split_enabled=True,
+                           cp_rebalance_period=1e9)
+    for n in ("f", "g"):
+        cl.register_sync(Function(name=n, image_url="i", port=80,
+                                  scaling=ScalingConfig(**LONG_SCALING)))
+    invs = [cl.invoke("f", exec_time=60.0) for _ in range(4)]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    home = leader._fn_shard_id("f")
+    members = (home, (home + 1) % 4)
+    env.process(leader._split_function("f", members), name="split")
+    env.run(until=env.now + kill_at)
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 5.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not leader
+    assert len([1 for _, k, _ in cl.collector.events
+                if k == "cp-shard-recovered"]) == 4
+    st = new_leader.functions["f"]
+    if survives:
+        assert st.slices is not None and set(st.slices) == set(members)
+        # every pushed-back sandbox adopted into exactly one slice
+        assert set().union(*(sl.sandbox_ids for sl in st.slices.values())) \
+            == set(st.sandboxes)
+    else:
+        assert st.slices is None
+    assert_converged(cl, new_leader)
+    late = [cl.invoke(n, exec_time=0.01) for n in ("f", "g")]
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in late)
+    assert_converged(cl, new_leader)
+
+
+@pytest.mark.parametrize("kill_at,survives", [(1e-6, False), (2e-4, True)])
+def test_leader_killed_mid_rebalance_quiesce(kill_at, survives):
+    """Same, for the whole-function migration handoff: the quiesce grabs
+    both shards' scale locks, then publishes and persists. A kill inside
+    the quiesce hold (before the cross-shard hop completes) aborts the
+    move at the leadership check — replay lands the function back on its
+    hash home. A kill after the move, while the shardmap override's fsync
+    is in flight, cannot retract the write: the migration survives into
+    the next epoch."""
+    env, cl = make_sharded(cp_rebalance_enabled=True,
+                           cp_rebalance_period=1e9)
+    for i in range(6):
+        cl.register_sync(Function(name=f"f{i}", image_url="i", port=80,
+                                  scaling=ScalingConfig(**LONG_SCALING)))
+    invs = [cl.invoke(f"f{i}", exec_time=60.0) for i in range(6)]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    name = "f0"
+    src = leader._fn_shard_id(name)
+    dst = (src + 1) % 4
+    env.process(leader._migrate_functions(leader.shards[src],
+                                          leader.shards[dst], [name]),
+                name="mig")
+    env.run(until=env.now + kill_at)
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 5.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not leader
+    expected = dst if survives else src
+    assert new_leader._fn_shard_id(name) == expected
+    assert_converged(cl, new_leader)
+    late = [cl.invoke(f"f{i}", exec_time=0.01) for i in range(6)]
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in late)
+    assert_converged(cl, new_leader)
+
+
+def test_leader_killed_mid_scale_down_teardown():
+    """Teardowns in flight when the leader dies: the half-dismantled
+    sandboxes are NOT in the workers' pushed lists (kill_sandbox pops
+    before yielding), so the new leader must neither adopt them nor leak
+    their placer capacity."""
+    env, cl = make_sharded()
+    cl.register_sync(Function(
+        name="f", image_url="i", port=80,
+        scaling=ScalingConfig(stable_window=1.0, panic_window=1.0,
+                              scale_to_zero_grace=0.2)))
+    invs = [cl.invoke("f", exec_time=0.05) for _ in range(8)]
+    env.run(until=3.0)
+    assert all(not i.failed for i in invs)
+    leader = cl.control_plane_leader()
+    st = leader.functions["f"]
+    n_before = len(st.sandboxes)
+    assert n_before >= 1
+    # drive the scale-down, then kill the instant teardowns are in flight
+    deadline = env.now + 30.0
+    while env.now < deadline and len(st.sandboxes) == n_before:
+        env.run(until=env.now + 0.05)
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 5.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not leader
+    assert_converged(cl, new_leader)
+    late = cl.invoke("f", exec_time=0.01)
+    env.run(until=env.now + 10.0)
+    assert not late.failed
+    assert_converged(cl, new_leader)
+
+
+def test_dp_crash_during_cp_recovery():
+    """A data plane dies while the new leader is still replaying shards:
+    the DP resync and the per-shard admissions interleave, and both sides
+    must converge (DP tables rebuilt, endpoints re-added exactly once)."""
+    env, cl = make_sharded()
+    for i in range(4):
+        cl.register_sync(Function(name=f"f{i}", image_url="i", port=80,
+                                  scaling=ScalingConfig(**LONG_SCALING)))
+    invs = [cl.invoke(f"f{i}", exec_time=60.0) for i in range(4)]
+    env.run(until=5.0)
+    assert all(not i.failed for i in invs)
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 0.003)      # mid-recovery (replay in flight)
+    cl.fail_data_plane(0)
+    env.run(until=env.now + 30.0)       # CP recovery + DP restart/resync
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None
+    kinds = {k for _, k, _ in cl.collector.events}
+    assert "cp-recovered" in kinds and "dp-recovered" in kinds
+    assert_converged(cl, new_leader)
+    # recovered DP serves traffic from rebuilt tables
+    late = [cl.invoke(f"f{i}", exec_time=0.01) for i in range(4)]
+    env.run(until=env.now + 10.0)
+    assert all(not i.failed for i in late)
+    dp = cl.data_planes[0]
+    for i in range(4):
+        got = sorted(dp.tables[f"f{i}"].endpoints)
+        want = sorted(new_leader.functions[f"f{i}"].sandboxes)
+        assert got == want
+
+
+def test_deposed_leader_racing_replay_cannot_double_place():
+    """The deposed leader still has creations mid-boot when the new leader
+    replays worker state: those boots complete AFTER the depose and must be
+    dropped by the leadership check — never adopted by the new leader (the
+    worker never got them), never counted twice, never leaking capacity."""
+    env, cl = make_sharded()
+    cl.register_sync(Function(name="f", image_url="i", port=80,
+                              scaling=ScalingConfig(**LONG_SCALING)))
+    warm = cl.invoke("f", exec_time=60.0)
+    env.run(until=5.0)
+    assert not warm.failed
+    old = cl.control_plane_leader()
+    # put a creation in flight (firecracker boot ~40 ms), then depose
+    cl.invoke("f", exec_time=60.0)
+    cl.invoke("f", exec_time=60.0)
+    env.run(until=env.now + 0.01)
+    assert sum(st.creating for st in old.functions.values()) >= 1
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 5.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader is not old
+    # the old leader's orphaned boots were dropped, not leaked
+    assert all(st.creating == 0 for st in old.functions.values())
+    assert_converged(cl, new_leader)
+    late = cl.invoke("f", exec_time=0.01)
+    env.run(until=env.now + 10.0)
+    assert not late.failed
+    assert_converged(cl, new_leader)
+
+
 def test_dp_recovery_snapshot_order():
     """Regression for the snapshot block in Cluster._recover_data_plane:
     the functions/endpoints the recovered DP is handed iterate insertion-

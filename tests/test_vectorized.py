@@ -1,0 +1,249 @@
+"""Decision-identity guards for the vectorized model paths (PR 8).
+
+The vectorized fast paths (array-backed metric windows, cohort heartbeat
+wheel, batched eviction reconcile) exist purely to push the churn grid to
+50k workers — they must never change what the model *decides*. Each test
+here pins one fast path against its scalar reference:
+
+  * ``VectorWindow`` vs the deque ``ConcurrencyWindow`` on randomized
+    streams — same lengths, same evictions, averages equal to float
+    round-off, and (the part that matters) identical ``desired()``
+    decisions through the full autoscaler state machine.
+  * the cohort heartbeat wheel vs the exact per-worker wheel — same
+    creations, no false evictions, and a dead worker still evicted
+    promptly in both modes.
+  * batched eviction reconcile vs the legacy all-functions sweep on an
+    eviction storm — same replacement creations, same final per-function
+    replica counts.
+
+These run in the CI sanitize subset: they are cheap, seed-deterministic,
+and fail loudly if a fast path drifts from its reference.
+"""
+import math
+
+import numpy as np
+
+from repro.core import Cluster, Function, ScalingConfig
+from repro.core.autoscaler import (ConcurrencyWindow, FunctionAutoscalerState,
+                                   VectorWindow)
+from repro.simcore import Environment
+
+
+# -- VectorWindow vs deque reference ------------------------------------------
+
+def _random_stream(rng, n, horizon):
+    """Monotone non-decreasing times (DES clock) with occasional bursts of
+    identical timestamps and gaps larger than the horizon (full eviction)."""
+    t = 0.0
+    out = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.15:
+            dt = 0.0                       # burst: same-instant samples
+        elif r < 0.25:
+            dt = horizon * (1.0 + rng.random())   # gap: evicts everything
+        else:
+            dt = rng.random() * horizon / 7.0
+        t += dt
+        out.append((t, rng.random() * 40.0))
+    return out
+
+
+def test_vector_window_matches_deque_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(40):
+        horizon = float(rng.choice([0.5, 6.0, 60.0]))
+        ref = ConcurrencyWindow(horizon)
+        vec = VectorWindow(horizon)
+        for t, v in _random_stream(rng, 400, horizon):
+            ref.record(t, v)
+            vec.record(t, v)
+            assert len(vec) == len(ref.values), \
+                f"trial {trial}: eviction drift at t={t}"
+            ra, va = ref.average(t), vec.average(t)
+            assert math.isclose(ra, va, rel_tol=1e-9, abs_tol=1e-12), \
+                f"trial {trial}: average drift {ra} vs {va}"
+            assert ref.max(t) == vec.max(t)
+
+
+def test_vector_window_eviction_boundary():
+    """A sample exactly ``horizon`` old stays (deque keeps ``times[0] ==
+    cut``); one epsilon older goes. Both implementations must agree on the
+    boundary or window populations drift over long runs."""
+    for win in (ConcurrencyWindow(10.0), VectorWindow(10.0)):
+        win.record(0.0, 5.0)
+        win.record(10.0, 7.0)              # cut == 0.0: first sample stays
+        assert win.average(10.0) == 6.0
+        win.record(10.0 + 1e-9, 7.0)       # cut > 0.0: first sample evicted
+        assert win.average(10.0 + 1e-9) == 7.0
+
+
+def test_vector_window_growth_and_compaction():
+    """Push far past the initial capacity with interleaved full evictions so
+    compaction, doubling, and the ring indices all get exercised."""
+    ref = ConcurrencyWindow(1.0)
+    vec = VectorWindow(1.0)
+    t = 0.0
+    for i in range(5000):
+        t += 0.001 if i % 997 else 5.0     # periodic full eviction
+        v = float(i % 13)
+        ref.record(t, v)
+        vec.record(t, v)
+    assert len(vec) == len(ref.values)
+    assert math.isclose(ref.average(t), vec.average(t), rel_tol=1e-9)
+
+
+def test_autoscaler_decision_identity_on_random_streams():
+    """The whole point: the autoscaler consumes windows only through
+    ``desired()``. Feed both variants one identical randomized metric
+    stream and assert every decision — and the panic/zero state machines
+    behind them — stays identical."""
+    rng = np.random.default_rng(2024)
+    for trial in range(10):
+        scaling = ScalingConfig(stable_window=6.0, panic_window=0.6,
+                                scale_to_zero_grace=2.0,
+                                target_concurrency=float(rng.integers(1, 5)),
+                                max_scale=int(rng.integers(8, 200)))
+        a = FunctionAutoscalerState(scaling, vectorized=False)
+        b = FunctionAutoscalerState(scaling, vectorized=True)
+        t = 0.0
+        mismatches = 0
+        for step in range(2000):
+            t += float(rng.random()) * 0.5
+            conc = float(rng.random() * 30.0) if rng.random() > 0.2 else 0.0
+            a.record_metric(t, conc)
+            b.record_metric(t, conc)
+            ready = int(rng.integers(0, 24))
+            da, db = a.desired(t, ready), b.desired(t, ready)
+            if da != db:
+                mismatches += 1
+            assert (a.in_panic_since is None) == (b.in_panic_since is None)
+            assert (a.zero_since is None) == (b.zero_since is None)
+        assert mismatches == 0, \
+            f"trial {trial}: {mismatches} decision mismatches"
+
+
+# -- cohort heartbeat wheel vs exact wheel ------------------------------------
+
+def _run_hb_cell(quantum, kill_wid=None, seed=11):
+    env = Environment(seed=seed)
+    cl = Cluster(env, n_workers=24, runtime="firecracker",
+                 hb_cohort_quantum=quantum)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(6)]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="i", port=80,
+            scaling=ScalingConfig(stable_window=30.0,
+                                  scale_to_zero_grace=30.0)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        for _ in range(4):
+            for n in names:
+                for _ in range(3):
+                    cl.invoke(n, exec_time=0.05)
+            yield env.timeout(1.0)
+
+    env.process(driver(env), name="hb-driver")
+    env.run(until=6.0)
+    evicted_at = None
+    if kill_wid is not None:
+        cl.fail_worker_daemon(kill_wid)
+        t_kill = env.now
+        env.run(until=t_kill + 10.0)
+        for t, k, d in cl.collector.events:
+            if k == "worker-evicted" and t >= t_kill:
+                evicted_at = t - t_kill
+                break
+    else:
+        env.run(until=12.0)
+    evictions = sum(1 for _, k, _ in cl.collector.events
+                    if k == "worker-evicted")
+    return (cl.collector.sandbox_creations, evictions,
+            len(cl.collector.completed), env.events_processed, evicted_at)
+
+
+def test_cohort_heartbeats_no_false_evictions():
+    """Cohort mode snaps first beats onto the shared grid and batches
+    same-deadline beats into one lock hold — it must neither evict a live
+    worker nor change what the cluster builds, and it must do so in FEWER
+    heap events than per-worker exact beats."""
+    from repro.core.costmodel import DEFAULT_COSTS
+    q = DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum
+    creations_c, evictions_c, done_c, events_c, _ = _run_hb_cell(q)
+    creations_e, evictions_e, done_e, events_e, _ = _run_hb_cell(None)
+    assert evictions_c == 0 and evictions_e == 0
+    assert creations_c == creations_e
+    assert done_c == done_e
+    assert events_c < events_e, (
+        f"cohort wheel stopped saving events: {events_c} vs {events_e}")
+
+
+def test_cohort_heartbeats_still_evict_dead_workers():
+    """Batching beats must not mask death: a worker whose daemon dies stops
+    appearing in the cohort's live set, its ``last_hb`` goes stale, and the
+    health loop evicts it within the same timeout bound as exact mode."""
+    from repro.core.costmodel import DEFAULT_COSTS
+    c = DEFAULT_COSTS.dirigent
+    q = c.worker_hb_cohort_quantum
+    *_, evicted_c = _run_hb_cell(q, kill_wid=3)
+    *_, evicted_e = _run_hb_cell(None, kill_wid=3)
+    assert evicted_c is not None and evicted_e is not None
+    # both modes detect within timeout + one health-check period + slack
+    bound = c.worker_heartbeat_timeout + 2.0 * c.worker_heartbeat_period + 1.0
+    assert evicted_c <= bound
+    assert evicted_e <= bound
+    # cohort quantization shifts beat instants by at most one quantum, so
+    # detection time may differ only marginally between modes
+    assert abs(evicted_c - evicted_e) <= 2.0 * c.worker_heartbeat_period + q
+
+
+# -- batched eviction reconcile vs legacy sweep -------------------------------
+
+def _run_eviction_storm(batched, seed=5):
+    env = Environment(seed=seed)
+    cl = Cluster(env, n_workers=16, runtime="firecracker", cp_shards=4,
+                 cp_batched_eviction=batched)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(8)]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="i", port=80,
+            scaling=ScalingConfig(stable_window=60.0,
+                                  scale_to_zero_grace=60.0)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+    for n in names:
+        for _ in range(4):
+            cl.invoke(n, exec_time=40.0)
+    env.run(until=8.0)
+    # the storm: three workers die at once, shredding replicas across every
+    # function; the health loop notices and reconciles replacements
+    for wid in (1, 5, 9):
+        cl.fail_worker_daemon(wid)
+    env.run(until=30.0)
+    per_fn = {n: len(leader.functions[n].sandboxes) for n in names}
+    placed_on_dead = sum(
+        1 for n in names for sb in leader.functions[n].sandboxes.values()
+        if sb.worker_id in (1, 5, 9))
+    return (per_fn, cl.collector.sandbox_creations,
+            sum(1 for _, k, _ in cl.collector.events if k == "worker-evicted"),
+            placed_on_dead)
+
+
+def test_batched_eviction_matches_legacy_sweep():
+    """The batched path reconciles only the functions that actually lost a
+    replica (unique, in eviction-scan order) instead of sweeping every
+    function on the shard. Replacement outcomes must be identical: same
+    evictions, same replacement creations, same final replica counts, and
+    nothing left placed on a dead worker."""
+    per_fn_b, creations_b, evictions_b, dead_b = _run_eviction_storm(True)
+    per_fn_l, creations_l, evictions_l, dead_l = _run_eviction_storm(False)
+    assert evictions_b == evictions_l == 3
+    assert dead_b == dead_l == 0
+    assert per_fn_b == per_fn_l
+    assert creations_b == creations_l
