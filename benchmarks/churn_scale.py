@@ -143,7 +143,8 @@ def placer_microbench(n_nodes: int, n_ops: int, use_index: bool,
 def churn_point(n_workers: int, rate: float, duration: float,
                 seed: int = 71, placement_policy: str = "balanced",
                 cp_shards: int = 1, hb_cohort: bool = False,
-                vector_windows: bool = False) -> dict:
+                vector_windows: bool = False,
+                group_commit: bool = False) -> dict:
     """One grid cell: the scalability.py cold-start churn workload, with
     wall-clock accounting alongside the simulated latency stats.
 
@@ -151,7 +152,9 @@ def churn_point(n_workers: int, rate: float, duration: float,
     snap to a shared grid and pop as one event) and ``vector_windows`` the
     array-backed metric windows — the two decision-identical fast paths that
     make the 50k-worker cell wall-clock feasible (tests/test_vectorized.py
-    pins both against their scalar references)."""
+    pins both against their scalar references). ``group_commit`` turns on
+    WAL group commit (``persist_group_commit``), without which the 100k-cell
+    boot alone is O(n_workers) serialized fsyncs ≈ 2+ minutes of sim time."""
     env = Environment(seed=seed)
     kw = {}
     if hb_cohort:
@@ -161,7 +164,8 @@ def churn_point(n_workers: int, rate: float, duration: float,
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
                        placement_policy=placement_policy,
                        cp_shards=cp_shards,
-                       cp_vector_windows=vector_windows, **kw)
+                       cp_vector_windows=vector_windows,
+                       persist_group_commit=group_commit, **kw)
     plan = [(i / rate, f"f{i}", 0.05) for i in range(int(rate * duration))]
     preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
     ev0, t0 = env.events_processed, time.perf_counter()
@@ -174,6 +178,8 @@ def churn_point(n_workers: int, rate: float, duration: float,
         "workers": n_workers, "rate": rate, "duration": duration,
         "policy": placement_policy, "cp_shards": cp_shards,
         "hb_cohort": hb_cohort, "vector_windows": vector_windows,
+        "group_commit": group_commit,
+        "group_commits": cl.store.group_commits,
         "events_per_creation": round(
             (env.events_processed - ev0)
             / max(cl.collector.sandbox_creations, 1), 1),
@@ -418,7 +424,10 @@ def run_multi_dp(out: str = "BENCH_churn.json", smoke: bool = False) -> dict:
 def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
                    duration: float = 8.0, kill_at: float = 4.0,
                    incremental: bool = True, seed: int = 77,
-                   recovery_window: float = 2.0, n_hot: int = 16) -> dict:
+                   recovery_window: float = 2.0, n_hot: int = 16,
+                   group_commit: bool = False, checkpoint: bool = False,
+                   checkpoint_period: float = 1.5,
+                   read_per_record: float = 0.0) -> dict:
     """One ``failover_scale`` cell: leader killed mid-churn, with a live
     fn→shard-set split and a whole-function migration in flight.
 
@@ -440,7 +449,14 @@ def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
     Pre-kill state the replay must handle: the hot function split across a
     shard-set (persisted override), one churn function migrated off its
     hash home (persisted override), and a second migration spawned 100 µs
-    before the kill — mid-quiesce, never persisted, must roll back."""
+    before the kill — mid-quiesce, never persisted, must roll back.
+
+    The 100k extension: ``group_commit`` makes the boot feasible (O(batches)
+    of fsync sim-time), ``read_per_record`` makes a full ``worker/`` prefix
+    scan honestly record-count-proportional, and ``checkpoint`` gives the
+    recovering leader a compacted snapshot + post-checkpoint delta instead
+    of that scan — the off-vs-on pair at equal seed isolates what
+    checkpointed recovery buys (creations must stay bit-equal)."""
     from repro.core.costmodel import DEFAULT_COSTS
     env = Environment(seed=seed)
     cl = make_dirigent(
@@ -451,7 +467,11 @@ def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
         cp_rebalance_enabled=cp_shards > 1,
         cp_rebalance_period=1e9,          # handoffs driven explicitly below
         cp_fn_split_enabled=cp_shards > 1,
-        hb_cohort_quantum=DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum)
+        hb_cohort_quantum=DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum,
+        persist_group_commit=group_commit,
+        persist_read_per_record=read_per_record,
+        cp_checkpoint_enabled=checkpoint,
+        cp_checkpoint_period=checkpoint_period)
     gap = 0.3                              # pre-kill churn quiet period
     n_churn = int(rate * (duration - gap))
     churn_names = [f"c{i}" for i in range(n_churn)]
@@ -504,6 +524,10 @@ def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
     env.run(until=t0 + kill_at)
     t_kill = env.now
     pre_creations = cl.collector.sandbox_creations
+    # what the recovering leader will actually see: snapshot epoch + the
+    # post-checkpoint delta it replays per record instead of the full prefix
+    ckpt_epoch_at_kill = cl.store.checkpoint_epoch
+    ckpt_delta_at_kill = len(cl.store._ckpt_delta)
     cl.fail_control_plane_leader()
     env.run(until=t0 + duration + 30.0)
     wall = time.perf_counter() - w0
@@ -519,6 +543,10 @@ def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
         "duration": duration, "kill_at": kill_at,
         "mode": "incremental" if (incremental and cp_shards > 1)
                 else "serial",
+        "group_commit": group_commit, "checkpoint": checkpoint,
+        "read_per_record": read_per_record,
+        "checkpoint_epoch_at_kill": ckpt_epoch_at_kill,
+        "checkpoint_delta_at_kill": ckpt_delta_at_kill,
         "wall_s": round(wall, 3),
         "events": env.events_processed - ev0,
         "creations": col.sandbox_creations,
@@ -545,7 +573,8 @@ def failover_point(n_workers: int, cp_shards: int, rate: float = 1000.0,
 def _print_failover(cell: dict) -> None:
     fs = cell["first_shard_admitted_s"]
     print(f"failover workers={cell['workers']} shards={cell['cp_shards']} "
-          f"mode={cell['mode']}: "
+          f"mode={cell['mode']} "
+          f"ckpt={'on' if cell.get('checkpoint') else 'off'}: "
           f"ttfc={cell['time_to_first_creation_s']}s "
           f"recovered={cell['recovered_s']}s "
           f"first_shard={'-' if fs is None else f'{fs}s'} "
@@ -575,6 +604,11 @@ def run_failover_sweep(smoke: bool = False) -> list:
         cell = failover_point(w, s, incremental=inc)
         cells.append(cell)
         _print_failover(cell)
+    if not smoke:
+        for kw in failover_100k_cells():
+            cell = failover_point(**kw)
+            cells.append(cell)
+            _print_failover(cell)
     return cells
 
 
@@ -589,6 +623,152 @@ def run_failover(out: str = "BENCH_churn.json", smoke: bool = False) -> dict:
         result = {"meta": {"bench": "churn_scale"}}
     result["failover_scale"] = {"provenance": bench_provenance(),
                                 "cells": cells}
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def boot_point(n_workers: int, group_commit: bool, cp_shards: int = 8,
+               seed: int = 71, probe: bool = True) -> dict:
+    """One ``boot_scale`` cell: cold cluster → every worker registered and
+    heartbeating, the O(n_workers)-serialized-fsyncs path group commit
+    exists to cut. ``store_crc`` digests the full store (keys AND values, in
+    insertion order), so the off/on cells at equal worker count prove from
+    the JSON alone that bulk registration landed the identical log; the
+    probe cell is a small post-boot workload whose done/creation counts
+    must match across the pair (equivalent post-boot behaviour)."""
+    import zlib as _zlib
+    from repro.core.costmodel import DEFAULT_COSTS
+    env = Environment(seed=seed)
+    w0 = time.perf_counter()
+    cl = make_dirigent(
+        env, n_workers=n_workers, runtime="firecracker",
+        cp_shards=cp_shards, cp_vector_windows=True,
+        hb_cohort_quantum=DEFAULT_COSTS.dirigent.worker_hb_cohort_quantum,
+        persist_group_commit=group_commit)
+    boot_sim, boot_wall = env.now, time.perf_counter() - w0
+    store = cl.store
+    crc = 0
+    for k, v in store.data.items():
+        crc = _zlib.crc32(v, _zlib.crc32(k.encode(), crc))
+    cell = {
+        "workers": n_workers, "cp_shards": cp_shards,
+        "group_commit": group_commit,
+        "boot_sim_s": round(boot_sim, 6),
+        "boot_wall_s": round(boot_wall, 3),
+        "write_count": store.write_count,
+        "group_commits": store.group_commits,
+        "group_commit_writes": store.group_commit_writes,
+        "store_records": len(store.data),
+        "store_crc": crc,
+    }
+    if probe:
+        preload_functions(cl, ["probe"], SWEEP_SCALING)
+        t0 = env.now
+        invs = [cl.invoke("probe", exec_time=0.02) for _ in range(32)]
+        env.run(until=t0 + 5.0)
+        cell["probe_done"] = sum(1 for i in invs
+                                 if i.t_done > 0 and not i.failed)
+        cell["probe_creations"] = cl.collector.sandbox_creations
+    return cell
+
+
+def _print_boot(cell: dict) -> None:
+    print(f"boot workers={cell['workers']} "
+          f"gc={'on' if cell['group_commit'] else 'off'}: "
+          f"sim={cell['boot_sim_s']:.3f}s wall={cell['boot_wall_s']:.1f}s "
+          f"writes={cell['write_count']} commits={cell['group_commits']} "
+          f"crc={cell['store_crc']} "
+          f"probe={cell.get('probe_done')}/{cell.get('probe_creations')}",
+          flush=True)
+
+
+def run_boot_scale_sweep(smoke: bool = False) -> list:
+    sizes = (2000,) if smoke else (20_000, 50_000, 100_000)
+    cells = []
+    for n in sizes:
+        for gc in (False, True):
+            cell = boot_point(n, group_commit=gc)
+            cells.append(cell)
+            _print_boot(cell)
+    return cells
+
+
+def run_boot_scale(out: str = "BENCH_churn.json",
+                   smoke: bool = False) -> dict:
+    """``--boot-scale``: run only the boot sweep (workers × group-commit
+    off/on) and merge it into the existing out-file."""
+    cells = run_boot_scale_sweep(smoke)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["boot_scale"] = {"provenance": bench_provenance(), "cells": cells}
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def failover_100k_cells() -> list:
+    """The checkpointed-recovery pair: 100k workers, 8 shards, incremental
+    recovery, group-commit boot, honest record-count-proportional prefix
+    scans — identical except ``checkpoint``, so the delta-replay term is the
+    only thing that moves (and creations must stay bit-equal)."""
+    base = dict(n_workers=100_000, cp_shards=8, incremental=True,
+                group_commit=True, read_per_record=1e-6)
+    return [dict(base, checkpoint=False), dict(base, checkpoint=True)]
+
+
+def run_failover_100k(out: str = "BENCH_churn.json") -> dict:
+    """``--failover-100k``: run only the 100k checkpoint-off/on pair and
+    append it to the recorded ``failover_scale`` cells (replacing any prior
+    100k rows rather than re-running the whole sweep)."""
+    cells = []
+    for kw in failover_100k_cells():
+        cell = failover_point(**kw)
+        cells.append(cell)
+        _print_failover(cell)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    section = result.setdefault("failover_scale", {"cells": []})
+    section["cells"] = [c for c in section.get("cells", [])
+                        if c["workers"] < 100_000] + cells
+    section["provenance_100k"] = bench_provenance()
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return result
+
+
+def run_scale100k(out: str = "BENCH_churn.json") -> dict:
+    """``--scale-100k``: the 100k-worker churn cells (cohort heartbeats +
+    vector windows + group-commit boot, sharded CP), merged into the
+    existing out-file."""
+    cells = [
+        churn_point(100_000, 1000, 4.0, cp_shards=8, hb_cohort=True,
+                    vector_windows=True, group_commit=True),
+        churn_point(100_000, 2500, 4.0, cp_shards=8, hb_cohort=True,
+                    vector_windows=True, group_commit=True),
+    ]
+    for cell in cells:
+        print(f"workers={cell['workers']} rate={cell['rate']} "
+              f"gc={'on' if cell['group_commit'] else 'off'}: "
+              f"{cell['events_per_wall_s']:.0f} ev/s wall, "
+              f"{cell['events_per_creation']} events/creation, "
+              f"p99={cell['p99_ms']:.1f}ms "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["scale_100k"] = {"provenance": bench_provenance(), "cells": cells}
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -960,6 +1140,15 @@ if __name__ == "__main__":
     ap.add_argument("--scale-50k", action="store_true",
                     help="run only the 50k-worker churn cells (cohort "
                          "heartbeats + vector windows) and merge into --out")
+    ap.add_argument("--scale-100k", action="store_true",
+                    help="run only the 100k-worker churn cells (group-commit "
+                         "boot, 8 CP shards) and merge into --out")
+    ap.add_argument("--boot-scale", action="store_true",
+                    help="run only the boot sweep (workers x group-commit "
+                         "off/on) and merge into --out (honors --smoke)")
+    ap.add_argument("--failover-100k", action="store_true",
+                    help="run only the 100k checkpoint-off/on failover pair "
+                         "and append it to the recorded failover_scale cells")
     ap.add_argument("--out", default="BENCH_churn.json")
     args = ap.parse_args()
     if args.live_smoke:
@@ -968,7 +1157,13 @@ if __name__ == "__main__":
         run_multi_dp(out=args.out, smoke=args.smoke)
     elif args.failover:
         run_failover(out=args.out, smoke=args.smoke)
+    elif args.failover_100k:
+        run_failover_100k(out=args.out)
     elif args.scale_50k:
         run_scale50k(out=args.out)
+    elif args.scale_100k:
+        run_scale100k(out=args.out)
+    elif args.boot_scale:
+        run_boot_scale(out=args.out, smoke=args.smoke)
     else:
         run_bench(smoke=args.smoke, out=args.out)

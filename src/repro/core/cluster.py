@@ -135,10 +135,17 @@ class Cluster:
                  cp_vector_windows: bool = False,
                  cp_batched_eviction: bool = True,
                  hb_cohort_quantum: Optional[float] = None,
+                 persist_group_commit: Optional[bool] = None,
+                 persist_read_per_record: Optional[float] = None,
+                 cp_checkpoint_enabled: bool = False,
+                 cp_checkpoint_period: Optional[float] = None,
                  create_hook: Optional[Callable] = None):
         self.env = env
         self.costs = (costs or DEFAULT_COSTS).dirigent
         self.collector = Collector()
+        self._persist_group_commit = (
+            self.costs.persist_group_commit if persist_group_commit is None
+            else persist_group_commit)
         self.store = SimStore(
             env, fsync_latency=self.costs.persist_write,
             replication_latency=self.costs.persist_replication,
@@ -146,7 +153,15 @@ class Cluster:
             n_replicas=n_control_planes,
             fsync_sigma=self.costs.persist_write_sigma,
             stall_prob=self.costs.persist_stall_prob,
-            stall=self.costs.persist_stall)
+            stall=self.costs.persist_stall,
+            group_commit=self._persist_group_commit,
+            max_batch=self.costs.persist_max_batch,
+            read_per_record=(
+                self.costs.persist_read_per_record
+                if persist_read_per_record is None
+                else persist_read_per_record),
+            snapshot_load_per_record=self.costs.cp_snapshot_load_per_record,
+            checkpoint_enabled=cp_checkpoint_enabled)
         # Sandbox ids are allocated from one cluster-wide counter shared by
         # every CP replica: a freshly elected leader must not reissue ids the
         # deposed leader already handed to workers, or its new sandboxes would
@@ -168,7 +183,9 @@ class Cluster:
                          ep_flush_coalesce=cp_ep_flush_coalesce,
                          incremental_recovery=cp_incremental_recovery,
                          vector_windows=cp_vector_windows,
-                         batched_eviction=cp_batched_eviction)
+                         batched_eviction=cp_batched_eviction,
+                         checkpoint_enabled=cp_checkpoint_enabled,
+                         checkpoint_period=cp_checkpoint_period)
             for i in range(n_control_planes)
         ]
         self.data_planes: List[DataPlane] = [
@@ -181,9 +198,13 @@ class Cluster:
         ]
         self.workers: Dict[int, WorkerDaemon] = {}
         for wid in range(n_workers):
+            # three-octet address plan: the old (10, 0, wid // 250, wid % 250)
+            # overflowed an octet at 64k workers — the 100k cells need the
+            # full 10.0.0.0/8 space
             info = WorkerNodeInfo(
                 worker_id=wid, name=f"w{wid}",
-                ip=(10, 0, wid // 250, wid % 250), port=9000)
+                ip=(10, (wid >> 16) & 255, (wid >> 8) & 255, wid & 255),
+                port=9000)
             self.workers[wid] = WorkerDaemon(env, info, self.costs,
                                              runtime=runtime,
                                              create_hook=create_hook)
@@ -259,15 +280,28 @@ class Cluster:
                 info = DataPlaneInfo(dp_id=dp.dp_id,
                                      ip=(10, 1, 0, dp.dp_id), port=8080)
                 yield from leader.register_data_plane(info)
-            for wid, w in self.workers.items():
-                yield from leader.register_worker(w.info)
-                # the daemon starts heartbeating the moment it registers.
-                # Starting these only after the WHOLE boot loop used to let
-                # early-registered workers exceed the heartbeat timeout while
-                # later registrations' persistence writes were still draining
-                # (boot is O(n_workers) fsyncs of sim time), silently evicting
-                # ~a quarter of a 1000-worker fleet before first beat.
-                self._hb_wheel_add(wid)
+            if self._persist_group_commit:
+                # bulk boot: the whole registration log lands through
+                # write_many in O(batches) group commits instead of
+                # O(n_workers) serialized fsyncs; every registration commits
+                # at the same instant, so heartbeats (started afterwards, in
+                # the same worker order and off the same hb-{wid} streams)
+                # never race a still-draining boot log
+                yield from leader.register_workers_bulk(
+                    [w.info for w in self.workers.values()])
+                for wid in self.workers:
+                    self._hb_wheel_add(wid)
+            else:
+                for wid, w in self.workers.items():
+                    yield from leader.register_worker(w.info)
+                    # the daemon starts heartbeating the moment it registers.
+                    # Starting these only after the WHOLE boot loop used to
+                    # let early-registered workers exceed the heartbeat
+                    # timeout while later registrations' persistence writes
+                    # were still draining (boot is O(n_workers) fsyncs of sim
+                    # time), silently evicting ~a quarter of a 1000-worker
+                    # fleet before first beat.
+                    self._hb_wheel_add(wid)
             done.succeed(None)
 
         self.env.process(boot(self.env), name="cluster-boot")

@@ -236,7 +236,9 @@ class ControlPlane:
                  ep_flush_coalesce: Optional[bool] = None,
                  incremental_recovery: bool = True,
                  vector_windows: bool = False,
-                 batched_eviction: bool = True):
+                 batched_eviction: bool = True,
+                 checkpoint_enabled: bool = False,
+                 checkpoint_period: Optional[float] = None):
         self.env = env
         self.cp_id = cp_id
         self.costs = costs
@@ -319,6 +321,15 @@ class ControlPlane:
         # worker actually hosted instead of every function the owning shard
         # autoscales (legacy path kept as the decision reference)
         self.batched_eviction = bool(batched_eviction)
+        # checkpointed recovery: the leader periodically persists a compacted
+        # ``checkpoint/<epoch>`` snapshot off the critical path, and
+        # recover_as_leader loads snapshot + post-checkpoint delta instead of
+        # re-reading the full worker/ prefix. Off by default (the legacy
+        # full-prefix replay is what the recovery event-budget pin asserts).
+        self.checkpoint_enabled = bool(checkpoint_enabled)
+        self.checkpoint_period = (costs.cp_checkpoint_period
+                                  if checkpoint_period is None
+                                  else checkpoint_period)
         # shard ids still replaying after a failover: traffic to them is not
         # admitted yet (urgent reconciles are deferred to the shard's own
         # autoscale loop, which starts at admission)
@@ -420,6 +431,22 @@ class ControlPlane:
             self._loops.append(self.env.process(
                 self._rebalance_loop(),
                 name=f"cp{self.cp_id}-rebalance"))
+        if self.checkpoint_enabled:
+            self._loops.append(self.env.process(
+                self._checkpoint_loop(),
+                name=f"cp{self.cp_id}-checkpoint"))
+
+    def _checkpoint_loop(self) -> Generator:
+        """Leader-only: persist a compacted snapshot every checkpoint period.
+        The write itself serializes on the store WAL like any other write —
+        off the invocation critical path, but an honest WAL hold."""
+        while True:
+            yield self.env.timeout(self.checkpoint_period)
+            if not (self.alive and self.is_leader):
+                return
+            yield from self.store.write_checkpoint()
+            self.collector.event(self.env.now, "cp-checkpoint",
+                                 self.store.checkpoint_epoch)
 
     def stop(self) -> None:
         self.alive = False
@@ -499,6 +526,23 @@ class ControlPlane:
             self.env.now
         self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
                              info.mem_capacity_mb)
+
+    def register_workers_bulk(self, infos: List[WorkerNodeInfo]) -> Generator:
+        """Bulk boot registration (group-commit mode): the whole worker log
+        lands through ``store.write_many`` in O(batches) group commits, then
+        every worker is installed in the same order the serialized loop
+        would have used — same workers-map, health-slice and placer insertion
+        order, so the two boot paths are equivalence-testable record for
+        record."""
+        yield from self.store.write_many(
+            [(f"worker/{info.worker_id}", info.persisted_record())
+             for info in infos])
+        for info in infos:
+            self.workers[info.worker_id] = info
+            self._worker_shard(info.worker_id).worker_last_hb[info.worker_id] \
+                = self.env.now
+            self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
+                                 info.mem_capacity_mb)
 
     def register_data_plane(self, dp_info) -> Generator:
         yield from self.store.write(f"dataplane/{dp_info.dp_id}",
@@ -1019,10 +1063,13 @@ class ControlPlane:
         self._apply_ep_updates(batch, dps)
 
     def _apply_ep_updates(self, updates, dps) -> None:
+        # leadership is stable for the whole batch (pure synchronous applies,
+        # no yield): hoist the per-update check out of the per-creation loop
+        is_leader = self.is_leader
         for op, fn, payload, drain in updates:
             if op == "add":
                 # a dethroned leader must not introduce endpoints...
-                if self.is_leader:
+                if is_leader:
                     for dp in dps:
                         dp.add_endpoint(fn, payload)
             else:
@@ -1542,11 +1589,38 @@ class ControlPlane:
         # one consistent snapshot bounds the replay: everything written
         # after this point belongs to the new leader's own epoch and is
         # handled by the live loops, not the recovery units
-        func_records = yield from self.store.read_prefix("function/")
-        shardmap: Dict[str, object] = {}
-        if self.rebalance_enabled or self.fn_split_enabled:
-            shardmap = yield from self.store.read_prefix("shardmap/")
-        worker_records = yield from self.store.read_prefix("worker/")
+        ckpt = None
+        if self.checkpoint_enabled:
+            ckpt = yield from self.store.read_checkpoint()
+        if ckpt is not None:
+            # checkpointed recovery: one compacted snapshot record + the
+            # post-checkpoint delta, instead of full-prefix scans. Records
+            # sourced from the snapshot bulk-load at
+            # cp_snapshot_load_per_record in the units below; only the delta
+            # pays the per-record state-machine replay.
+            snap, delta = ckpt
+            merged = dict(snap)
+            for key, rec in delta.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
+                if rec is None:
+                    merged.pop(key, None)
+                else:
+                    merged[key] = rec
+            func_records = {k: v for k, v in merged.items()  # simlint: ok(dict-iteration): snapshot+delta order is deterministic
+                            if k.startswith("function/")}
+            shardmap: Dict[str, object] = {}
+            if self.rebalance_enabled or self.fn_split_enabled:
+                shardmap = {k: v for k, v in merged.items()  # simlint: ok(dict-iteration): snapshot+delta order is deterministic
+                            if k.startswith("shardmap/")}
+            worker_records = {k: v for k, v in merged.items()  # simlint: ok(dict-iteration): snapshot+delta order is deterministic
+                              if k.startswith("worker/")}
+            delta_keys = set(delta)
+        else:
+            func_records = yield from self.store.read_prefix("function/")
+            shardmap = {}
+            if self.rebalance_enabled or self.fn_split_enabled:
+                shardmap = yield from self.store.read_prefix("shardmap/")
+            worker_records = yield from self.store.read_prefix("worker/")
+            delta_keys = None
         self.functions = {}
         self.fn_shard_table = {}
         self._split_fns = set()
@@ -1559,10 +1633,10 @@ class ControlPlane:
         self.no_downscale_until = self.env.now + c.recovery_no_downscale
         if self.incremental_recovery and self.cp_shards > 1:
             yield from self._recover_incremental(func_records, shardmap,
-                                                 worker_records)
+                                                 worker_records, delta_keys)
         else:
             yield from self._recover_serial(func_records, shardmap,
-                                            worker_records)
+                                            worker_records, delta_keys)
 
     def _replay_shardmap_override(self, key: str, rec) -> None:
         """Re-apply one persisted ``shardmap/<fn>`` override (an ``int`` sole
@@ -1622,14 +1696,38 @@ class ControlPlane:
         self.placer.add_node(info.worker_id, info.cpu_capacity_millis,
                              info.mem_capacity_mb)
 
+    def _recover_worker_replay_cost(self, n_workers: int,
+                                    n_delta: int, from_ckpt: bool) -> float:
+        """Worker-record rebuild cost. Worker records dominate the replay at
+        scale (100k workers vs hundreds of functions), so they are the slice
+        the checkpoint accelerates: snapshot-sourced records bulk-load at
+        ``cp_snapshot_load_per_record`` (deserialize into the maps), only
+        post-checkpoint delta records pay the full per-record
+        ``cp_cross_shard_op`` state-machine step."""
+        c = self.costs
+        if not from_ckpt:
+            return c.cp_cross_shard_op * n_workers
+        return (c.cp_cross_shard_op * n_delta
+                + c.cp_snapshot_load_per_record * (n_workers - n_delta))
+
     def _recover_serial(self, func_records, shardmap,
-                        worker_records) -> Generator:
+                        worker_records, delta_keys=None) -> Generator:
         """Single-pass replay: everything rebuilt, then every shard admitted
         at once (the pre-incremental shape, with the replay now costed)."""
         c = self.costs
-        n_replay = len(func_records) + len(shardmap) + len(worker_records)
-        if n_replay:
-            yield self.env.timeout(c.cp_cross_shard_op * n_replay)
+        if delta_keys is None:
+            # legacy full-prefix replay: the exact expression the recovery
+            # event-budget pin was recorded against (same float arithmetic)
+            n_replay = len(func_records) + len(shardmap) + len(worker_records)
+            if n_replay:
+                yield self.env.timeout(c.cp_cross_shard_op * n_replay)
+        else:
+            n_wrk_delta = sum(1 for k in worker_records if k in delta_keys)
+            dt = (c.cp_cross_shard_op * (len(func_records) + len(shardmap))
+                  + self._recover_worker_replay_cost(len(worker_records),
+                                                     n_wrk_delta, True))
+            if dt:
+                yield self.env.timeout(dt)
         for key, rec in func_records.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
             self.install_function(Function.from_record(rec))
         for key, rec in shardmap.items():  # simlint: ok(dict-iteration): WAL write order is deterministic
@@ -1649,7 +1747,7 @@ class ControlPlane:
                              name=f"merge-{wid}")
 
     def _recover_incremental(self, func_records, shardmap,
-                             worker_records) -> Generator:
+                             worker_records, delta_keys=None) -> Generator:
         """Per-shard recovery units over one bounded snapshot.
 
         The snapshot is bucketed by *post-override* owner up front (pure
@@ -1705,7 +1803,8 @@ class ControlPlane:
             self._loops.append(self.env.process(
                 self._recover_shard_unit(
                     shard, fns_by_shard[shard.shard_id], overrides_by_fn,
-                    workers_by_shard[shard.shard_id], barrier_state, barrier),
+                    workers_by_shard[shard.shard_id], barrier_state, barrier,
+                    delta_keys),
                 name=f"cp{self.cp_id}-recover-{shard.shard_id}"))
         # the leader's own thread waits for the function table to be whole,
         # then syncs the DP caches; worker replay + admission continue in
@@ -1745,7 +1844,8 @@ class ControlPlane:
     def _recover_shard_unit(self, shard: ControlPlaneShard,
                             fns: List[Function], overrides_by_fn: Dict,
                             workers: List[WorkerNodeInfo],
-                            barrier_state: Dict, barrier) -> Generator:
+                            barrier_state: Dict, barrier,
+                            delta_keys=None) -> Generator:
         """One shard's recovery unit: replay functions homed here (overrides
         included), wait for every other unit's function replay, replay this
         shard's workers, then admit the shard."""
@@ -1785,7 +1885,15 @@ class ControlPlane:
         else:
             yield barrier
         if workers:
-            yield self.env.timeout(c.cp_cross_shard_op * len(workers))
+            if delta_keys is None:
+                yield self.env.timeout(c.cp_cross_shard_op * len(workers))
+            else:
+                n_delta = sum(1 for info in workers
+                              if f"worker/{info.worker_id}" in delta_keys)
+                dt = self._recover_worker_replay_cost(len(workers),
+                                                      n_delta, True)
+                if dt:
+                    yield self.env.timeout(dt)
         for info in workers:
             self._install_recovered_worker(info)
         # admit this shard: health + autoscale loops from here on

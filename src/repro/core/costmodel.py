@@ -188,6 +188,36 @@ class DirigentCosts:
     persist_stall: float = 0.120       # long WAL holds -> p99 surge at ~500/s
     persist_read: float = 0.2e-3
     persist_replication: float = 0.5e-3  # sync replication to standbys
+    persist_group_commit: bool = False  # WAL group commit: writers queued
+    #                                    behind an in-flight fsync are absorbed
+    #                                    into one batch committed by a single
+    #                                    fsync + one replication round (and
+    #                                    ``write_many`` bulk-appends the boot
+    #                                    registration log in batches). Default
+    #                                    OFF: the serialized per-write path is
+    #                                    the paper's model and the event-budget
+    #                                    pins assert it bit-identically;
+    #                                    ``Cluster(persist_group_commit=True)``
+    #                                    opts a run in (the 100k-worker boot
+    #                                    needs it — see docs/operations.md).
+    persist_max_batch: int = 512       # group-commit batch ceiling: one fsync
+    #                                    covers at most this many queued writes
+    persist_read_per_record: float = 0.0  # per-record cost of a prefix scan
+    #                                    (``read_prefix``). 0.0 keeps the
+    #                                    legacy flat ``persist_read`` latency
+    #                                    (bit-identical); the 100k recovery
+    #                                    benches set ~1e-6 s/record so a full
+    #                                    ``worker/`` scan is honestly linear.
+    cp_checkpoint_period: float = 5.0  # leader snapshot cadence when
+    #                                    ``Cluster(cp_checkpoint_enabled=True)``
+    #                                    — a compacted ``checkpoint/<epoch>``
+    #                                    record written off the critical path
+    cp_snapshot_load_per_record: float = 0.4e-6  # bulk snapshot deserialize,
+    #                                    per record: ~10× cheaper than a
+    #                                    ``cp_cross_shard_op`` replay step —
+    #                                    loading a memcpy'd snapshot vs
+    #                                    replaying WAL records through the
+    #                                    state machine
 
     # -- worker node ---------------------------------------------------------
     containerd_create_median: float = 0.110  # s; "10-100s of ms" regime

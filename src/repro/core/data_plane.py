@@ -87,6 +87,12 @@ class FunctionTable:
     queue: Deque[Invocation] = field(default_factory=deque)
     inflight: int = 0           # executing + queued (the autoscaling signal)
     creating_hint: int = 0      # CP-echoed count (metric freshness only)
+    free_slots: int = 0         # incrementally maintained sum of non-draining
+    #                             endpoints' free capacity: the O(1) stand-in
+    #                             for the per-queued-request any-free-slot
+    #                             scan (every in_use/draining transition in
+    #                             DataPlane adjusts it; the runtime sanitizer
+    #                             cross-checks it against the scan)
 
 
 class _Conn:
@@ -136,6 +142,9 @@ class DataPlane:
         from repro.core.policies import LB_POLICIES
         self.lb_policy = lb_policy
         self._lb_pick = LB_POLICIES[lb_policy]
+        # hoisted once: the backlog fast path in _drain_queue_tbl is
+        # least-loaded-only, and the string compare ran per dispatch
+        self._lb_fast = lb_policy == "least_loaded"
         self.alive = True
         self.tables: Dict[str, FunctionTable] = {}
         self._cpu = env.resource(capacity=costs.dp_cores,
@@ -162,6 +171,8 @@ class DataPlane:
         if ep is None:
             ep = tbl.endpoints[sandbox.sandbox_id] = Endpoint(
                 sandbox=sandbox, capacity=self.concurrency)
+            tbl.free_slots += ep.capacity
+        self._check_free_slots(tbl)
         self._drain_queue_tbl(tbl, hint=ep)
 
     def remove_endpoint(self, fn: str, sandbox_id: int, drain: bool = True) -> None:
@@ -172,9 +183,13 @@ class DataPlane:
         if ep is None:
             return
         if drain and ep.in_use > 0:
-            ep.draining = True
+            if not ep.draining:
+                tbl.free_slots -= ep.capacity - ep.in_use
+                ep.draining = True
         else:
             tbl.endpoints.pop(sandbox_id, None)
+            if not ep.draining:
+                tbl.free_slots -= ep.capacity - ep.in_use
             if self.conn_reuse:
                 self._close_idle_conns(sandbox_id)
 
@@ -235,6 +250,7 @@ class DataPlane:
         best = self._lb_pick(tbl.endpoints, fn, exclude=exclude)
         if best is not None:
             best.in_use += 1   # reserve the slot synchronously
+            tbl.free_slots -= 1  # every policy picks non-draining with free>0
         return best
 
     def _proxy(self, inv: Invocation, tbl: FunctionTable, ep: Endpoint) -> Generator:
@@ -422,6 +438,11 @@ class DataPlane:
         """Dispatch hit a dead sandbox: stop routing to it and tell the CP so
         cluster state (capacity, replacement scaling) reconciles — a stale
         endpoint must cost one failed request, not an endless stream."""
+        if not ep.draining:
+            tbl = self.tables.get(fn)
+            if tbl is not None \
+                    and tbl.endpoints.get(ep.sandbox.sandbox_id) is ep:
+                tbl.free_slots -= ep.capacity - ep.in_use
         ep.draining = True          # skipped by the LB; reaped on last release
         if not self.alive:
             return
@@ -437,6 +458,12 @@ class DataPlane:
             tbl.endpoints.pop(ep.sandbox.sandbox_id, None)
             if self.conn_reuse:
                 self._close_idle_conns(ep.sandbox.sandbox_id)
+        elif not ep.draining \
+                and tbl.endpoints.get(ep.sandbox.sandbox_id) is ep:
+            # the slot only counts if the endpoint is still routable: a
+            # release on an endpoint removed undrained (dead-sandbox
+            # reconcile) frees nothing the LB could pick
+            tbl.free_slots += 1
         self._drain_queue_tbl(tbl, hint=ep)
 
     def _drain_queue(self, fn: str) -> None:
@@ -446,7 +473,7 @@ class DataPlane:
 
     def _drain_queue_tbl(self, tbl: FunctionTable,
                          hint: Optional[Endpoint] = None) -> None:
-        if hint is not None and tbl.queue and self.lb_policy == "least_loaded":
+        if hint is not None and tbl.queue and self._lb_fast:
             # Backlog fast path. A request only ever queues when no endpoint
             # has a free slot, and every slot freed while the queue is
             # non-empty is consumed right here — so a backlogged function has
@@ -462,6 +489,7 @@ class DataPlane:
                 while tbl.queue and not hint.draining \
                         and hint.in_use < hint.capacity:
                     hint.in_use += 1
+                    tbl.free_slots -= 1
                     inv = tbl.queue.popleft()
                     inv._waiter.succeed(hint)   # type: ignore[attr-defined]
                 if tbl.queue:
@@ -474,6 +502,17 @@ class DataPlane:
             inv = tbl.queue.popleft()
             inv._waiter.succeed(ep)   # type: ignore[attr-defined]
 
+    def _check_free_slots(self, tbl: FunctionTable) -> None:
+        """Sanitize-mode tripwire: the incremental free-slot count must equal
+        the scan it replaced (counter drift would silently change urgent
+        metric pushes). Zero cost outside REPRO_SANITIZE=1."""
+        if self.env.sanitizer is None:
+            return
+        scan = sum(ep.capacity - ep.in_use
+                   for ep in tbl.endpoints.values() if not ep.draining)
+        assert tbl.free_slots == scan, \
+            f"free_slots drift: counter={tbl.free_slots} scan={scan}"
+
     # -- metrics -------------------------------------------------------------------
     def _notify_cp_now(self, fn: str, tbl: FunctionTable) -> None:
         """Immediate scaling hint when requests wait with zero free capacity."""
@@ -482,9 +521,13 @@ class DataPlane:
         cp = self.cluster.control_plane_leader()
         if cp is None:
             return
-        for ep in tbl.endpoints.values():     # early-exit: any free slot?
-            if not ep.draining and ep.in_use < ep.capacity:
-                return
+        self._check_free_slots(tbl)
+        # O(1) any-free-slot check: this ran as an O(endpoints) scan per
+        # *queued request* — at 100k-worker churn peaks the scans were the
+        # largest remaining per-creation DP cost (every creation's queue
+        # build-up walks the whole endpoint table of the hot function)
+        if tbl.free_slots > 0:
+            return
         self.env.process(
             cp.receive_metric(self.dp_id, fn, tbl.inflight, urgent=True),
             name="metric-push")
@@ -522,6 +565,7 @@ class DataPlane:
             tbl.queue.clear()
             tbl.inflight = 0
             tbl.endpoints.clear()
+            tbl.free_slots = 0
         # the crashed kernel forgets its whole port table: re-arm a fresh
         # pool so recovery starts from zero ports in use. In-flight requests
         # and TIME_WAIT holds from the old life captured the old pool object

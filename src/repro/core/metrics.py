@@ -1,6 +1,7 @@
 """Experiment metric collection: per-invocation records, percentiles, CDFs."""
 from __future__ import annotations
 
+from bisect import bisect_left
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional
@@ -38,11 +39,18 @@ class Collector:
     steal_probes: int = 0      # cross-shard capacity probes paid (spill path)
     steals: int = 0            # placements satisfied by a foreign shard
 
+    # per-kind timestamp index (events arrive in nondecreasing sim time, so
+    # each list is sorted): the failover benches probe creation timelines
+    # per cell, and at 100k-worker scale each probe was a full O(events)
+    # scan of the flat list
+    _times_by_kind: Dict[str, List[float]] = field(default_factory=dict)
+
     def done(self, inv: Invocation) -> None:
         self.invocations.append(inv)
 
     def event(self, t: float, kind: str, detail: object = None) -> None:
         self.events.append((t, kind, detail))
+        self._times_by_kind.setdefault(kind, []).append(t)
 
     # -- views ---------------------------------------------------------------
     @property
@@ -68,16 +76,16 @@ class Collector:
     def event_times(self, kind: str, after: float = 0.0) -> List[float]:
         """Timestamps of every recorded ``kind`` event at or after ``after``
         (failover analysis: creation timelines, recovery milestones)."""
-        return [t for t, k, _ in self.events if k == kind and t >= after]
+        ts = self._times_by_kind.get(kind, [])
+        return ts[bisect_left(ts, after):]
 
     def first_event_at(self, kind: str, after: float = 0.0) -> Optional[float]:
         """Instant of the first ``kind`` event at or after ``after``; ``None``
         if it never happened. ``first_event_at("sandbox-created", t_kill)``
         is the failover benchmark's time-to-first-creation probe."""
-        for t, k, _ in self.events:
-            if k == kind and t >= after:
-                return t
-        return None
+        ts = self._times_by_kind.get(kind, [])
+        i = bisect_left(ts, after)
+        return ts[i] if i < len(ts) else None
 
     def window_sched_latencies(self, t0: float, t1: float) -> np.ndarray:
         """Scheduling latencies of completed invocations that *arrived*

@@ -40,6 +40,19 @@ def render_metrics(cluster: "Cluster") -> str:
     lines.append(f"dirigent_cp_steal_probes_total {c.steal_probes}")
     lines.append("# TYPE dirigent_persistent_writes_total counter")
     lines.append(f"dirigent_persistent_writes_total {cluster.store.write_count}")
+    store = cluster.store
+    lines.append("# TYPE dirigent_store_group_commits_total counter")
+    lines.append(f"dirigent_store_group_commits_total {store.group_commits}")
+    lines.append("# TYPE dirigent_store_group_commit_batch_size gauge")
+    lines.append(f"dirigent_store_group_commit_batch_size "
+                 f"{store.last_batch_size}")
+    lines.append("# TYPE dirigent_store_checkpoint_epoch gauge")
+    lines.append(f"dirigent_store_checkpoint_epoch {store.checkpoint_epoch}")
+    # -1 = no checkpoint written yet (or checkpointing disabled)
+    ckpt_age = (-1 if store.checkpoint_at is None
+                else cluster.env.now - store.checkpoint_at)
+    lines.append("# TYPE dirigent_store_checkpoint_age_seconds gauge")
+    lines.append(f"dirigent_store_checkpoint_age_seconds {ckpt_age:.6f}")
 
     leader = cluster.control_plane_leader()
     lines.append("# TYPE dirigent_control_plane_leader gauge")

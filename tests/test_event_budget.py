@@ -259,3 +259,68 @@ def test_recovery_event_budget_and_determinism():
         f"recovery event budget exceeded: {events} > {RECOVERY_EVENT_BUDGET} "
         f"— replay has probably started paying per-sandbox or O(n_workers) "
         f"events (see module docstring before touching the budget)")
+
+
+# -- group-commit budget (persist_group_commit) -------------------------------
+# Exact count for a bursty workload with the durability ablation ON
+# (``persist_sandbox_state``: every creation/teardown pays a store write) and
+# group commit ON: concurrent cold-start writes queue behind the in-flight
+# fsync and are absorbed into batches, so the WAL pays one fsync + one
+# replication round per BATCH instead of per write. Group commit's win is
+# serialized fsync sim-TIME (test_persistence pins the >=5x boot cut), not
+# raw event count — a grouped write still costs its completion event — so
+# this pin guards the ON path's event complexity directly: exact budget,
+# two-run determinism, and the batch counters proving absorption actually
+# engaged (otherwise the budget would pin a degenerate one-write-per-batch
+# path). The off-path pins above already guarantee ``group_commit=False``
+# stays bit-identical to the pre-feature store.
+GROUP_COMMIT_EVENT_BUDGET = 9_348
+GC_WORKLOAD = dict(n_workers=50, n_functions=40, waves=5, wave_gap=2.5,
+                   horizon=16.0, seed=2024)
+
+
+def run_group_commit_cell():
+    w = GC_WORKLOAD
+    env = Environment(seed=w["seed"])
+    cl = Cluster(env, n_workers=w["n_workers"], runtime="firecracker",
+                 persist_sandbox_state=True, persist_group_commit=True)
+    cl.start()
+    leader = cl.control_plane_leader()
+    names = [f"f{i}" for i in range(w["n_functions"])]
+    for n in names:
+        leader.install_function(Function(
+            name=n, image_url="img://budget", port=80,
+            scaling=ScalingConfig(stable_window=1.0, panic_window=1.0,
+                                  scale_to_zero_grace=0.2)))
+        for dp in cl.data_planes:
+            dp.sync_functions([n])
+
+    def driver(env):
+        for _ in range(w["waves"]):
+            # a simultaneous cold burst: ~n_functions creations race, their
+            # sandbox writes queue behind one in-flight fsync and absorb
+            # into large batches — the regime group commit exists for
+            for n in names:
+                cl.invoke(n, exec_time=0.05)
+            yield env.timeout(w["wave_gap"])
+
+    env.process(driver(env), name="gc-budget-driver")
+    env.run(until=w["horizon"])
+    return (env.events_processed, cl.collector.sandbox_creations,
+            cl.store.group_commits, cl.store.group_commit_writes)
+
+
+def test_group_commit_event_budget_and_determinism():
+    a = run_group_commit_cell()
+    b = run_group_commit_cell()
+    assert a == b, "group commit broke seed-determinism"
+    events, creations, commits, commit_writes = a
+    assert creations > 0, "workload did no real work"
+    assert commits > 0 and commit_writes > commits, (
+        "no batch ever absorbed more than one writer — the workload no "
+        "longer contends on the WAL and the budget would pin nothing")
+    assert events <= GROUP_COMMIT_EVENT_BUDGET, (
+        f"group-commit event budget exceeded: {events} > "
+        f"{GROUP_COMMIT_EVENT_BUDGET} — the committer has probably started "
+        f"paying per-member events (see module docstring before touching "
+        f"the budget)")

@@ -1,0 +1,339 @@
+"""Group commit, checkpointed recovery, and FileStore crash semantics.
+
+The scale features this file covers are all default-off; the event-budget
+pins in test_event_budget.py guarantee the off paths stay bit-identical,
+while the tests here pin the ON semantics: batch absorption, stall
+amplification across a batch, determinism, boot equivalence (same final
+store state and registration order as the serialized path), checkpoint +
+delta recovery, and the FileStore torn-tail / compaction behaviour the
+SimStore checkpoints mirror.
+"""
+import os
+
+from repro.core import Cluster, Function, ScalingConfig
+from repro.core.persistence import (FileStore, SimStore, decode_records,
+                                    encode_records)
+from repro.simcore import Environment
+
+
+# -- SimStore group commit ----------------------------------------------------
+
+def make_store(env, **kw):
+    kw.setdefault("fsync_latency", 1e-3)
+    kw.setdefault("replication_latency", 0.5e-3)
+    kw.setdefault("read_latency", 0.2e-3)
+    kw.setdefault("fsync_sigma", 0.0)     # deterministic latency unless a
+    kw.setdefault("stall_prob", 0.0)      # test opts into stalls
+    return SimStore(env, **kw)
+
+
+def staggered_writes(env, store, done_at):
+    """One leading write, three absorbed behind its in-flight fsync, one
+    straggler after everything settled."""
+    def writer(key, delay):
+        yield env.timeout(delay)
+        yield from store.write(key, b"v-" + key.encode())
+        done_at[key] = env.now
+    for key, delay in [("a", 0.0), ("b", 1e-4), ("c", 1.2e-4),
+                       ("d", 1.4e-4), ("e", 0.1)]:
+        env.process(writer(key, delay), name=f"w-{key}")
+
+
+def test_group_commit_absorbs_queued_writers():
+    env = Environment(seed=1)
+    store = make_store(env, group_commit=True)
+    done_at = {}
+    staggered_writes(env, store, done_at)
+    env.run(until=1.0)
+    # a commits alone; b/c/d queued behind a's in-flight fsync form ONE
+    # batch; e arrives after the committer retired and commits alone
+    assert store.group_commits == 3
+    assert store.group_commit_writes == 5
+    assert done_at["b"] == done_at["c"] == done_at["d"]
+    assert done_at["a"] < done_at["b"] < done_at["e"]
+    assert store.write_count == 5
+    assert store.peek("c") == b"v-c"
+
+
+def test_group_commit_stall_holds_whole_batch():
+    """A compaction stall on ANY batch member delays every member: the batch
+    settles at the slowest draw, so absorbed writers share the p99 surge."""
+    env = Environment(seed=1)
+    store = make_store(env, group_commit=True, stall_prob=1.0, stall=0.120)
+    done_at = {}
+    staggered_writes(env, store, done_at)
+    env.run(until=5.0)
+    # every member of the b/c/d batch finishes at the same stalled instant,
+    # >= stall * 0.5 after they were enqueued
+    assert done_at["b"] == done_at["c"] == done_at["d"]
+    assert done_at["b"] - 1e-4 >= 0.120 * 0.5
+
+
+def test_group_commit_two_run_determinism():
+    def run():
+        env = Environment(seed=7)
+        store = make_store(env, group_commit=True, fsync_sigma=0.4,
+                           stall_prob=0.01)
+        done_at = {}
+        staggered_writes(env, store, done_at)
+        env.run(until=5.0)
+        return done_at, dict(store.data), env.events_processed
+    assert run() == run()
+
+
+def test_write_many_off_mode_matches_serial_writes():
+    """With group commit off, write_many degrades to the per-record
+    serialized path bit-identically (same draws, same completion instant)."""
+    items = [(f"k{i}", f"v{i}".encode()) for i in range(6)]
+
+    def run(bulk):
+        env = Environment(seed=3)
+        store = make_store(env, group_commit=False, fsync_sigma=0.4)
+
+        def driver():
+            if bulk:
+                yield from store.write_many(items)
+            else:
+                for k, v in items:
+                    yield from store.write(k, v)
+        env.process(driver(), name="driver")
+        env.run(until=5.0)
+        return env.now, dict(store.data), store.write_count, \
+            env.events_processed
+
+    assert run(bulk=True) == run(bulk=False)
+
+
+def test_write_many_commits_in_max_batch_chunks():
+    env = Environment(seed=4)
+    store = make_store(env, group_commit=True, max_batch=4)
+    items = [(f"k{i}", b"x") for i in range(10)]
+    env.process(store.write_many(items), name="bulk")
+    env.run(until=1.0)
+    assert store.group_commits == 3          # 4 + 4 + 2
+    assert store.last_batch_size == 2
+    assert list(store.data) == [k for k, _ in items]   # insertion order kept
+    assert store.write_count == 10
+
+
+# -- boot-path equivalence ----------------------------------------------------
+
+def boot_cluster(group_commit, n_workers=48, seed=11):
+    env = Environment(seed=seed)
+    cl = Cluster(env, n_workers=n_workers, cp_shards=4,
+                 persist_group_commit=group_commit)
+    cl.start()
+    return env, cl
+
+
+def test_boot_equivalence_and_speedup():
+    """Group-commit boot must land the exact same worker log (records AND
+    insertion order) and CP state as the serialized boot — just faster."""
+    env_off, cl_off = boot_cluster(group_commit=False)
+    env_on, cl_on = boot_cluster(group_commit=True)
+    assert cl_on.store.peek_prefix("worker/") == \
+        cl_off.store.peek_prefix("worker/")
+    assert list(cl_on.store.data) == list(cl_off.store.data)
+    leader_on, leader_off = (cl_on.control_plane_leader(),
+                             cl_off.control_plane_leader())
+    assert list(leader_on.workers) == list(leader_off.workers)
+    assert leader_on.placer.nodes.keys() == leader_off.placer.nodes.keys()
+    assert cl_on.store.write_count == cl_off.store.write_count
+    assert cl_on.store.group_commits > 0
+    # the point of the feature: boot is O(batches), not O(n_workers) fsyncs
+    assert env_on.now < env_off.now / 5
+
+
+def test_boot_equivalence_post_boot_workload():
+    """Post-boot behaviour is equivalent too: the same workload started at
+    boot-complete produces the same creations and completions."""
+    stats = []
+    for gc in (False, True):
+        env, cl = boot_cluster(group_commit=gc, n_workers=24)
+        cl.register_sync(Function(name="f", image_url="i", port=80))
+        t0 = env.now
+        for _ in range(8):
+            cl.invoke("f", exec_time=0.02)
+        env.run(until=t0 + 5.0)
+        stats.append((len(cl.collector.completed),
+                      len(cl.collector.failed),
+                      cl.collector.sandbox_creations))
+    assert stats[0] == stats[1]
+
+
+def test_deposed_leader_write_lands_mid_batch():
+    """A write enqueued under a leader that dies before the batch commits
+    still lands (the store is the replicated quorum, not the leader) and the
+    new leader recovers it."""
+    env = Environment(seed=5)
+    cl = Cluster(env, n_workers=8, enable_ha_sim=True,
+                 persist_group_commit=True)
+    cl.start()
+    env.run(until=2.0)
+    leader = cl.control_plane_leader()
+    old_id = leader.cp_id
+    env.process(leader.register_function(
+        Function(name="late", image_url="i", port=80)), name="late-reg")
+    # grpc hop done, persist write enqueued, group-commit fsync in flight
+    env.run(until=env.now + 0.8e-3)
+    assert cl.store._committing and cl.store.peek("function/late") is None
+    cl.fail_control_plane_leader()
+    env.run(until=env.now + 2.0)
+    new_leader = cl.control_plane_leader()
+    assert new_leader is not None and new_leader.cp_id != old_id
+    assert cl.store.peek("function/late") is not None
+    assert "late" in new_leader.functions
+
+
+# -- SimStore checkpoints -----------------------------------------------------
+
+def test_checkpoint_roundtrip_with_delta_and_tombstone():
+    env = Environment(seed=6)
+    store = make_store(env, checkpoint_enabled=True)
+
+    def driver():
+        yield from store.write("function/a", b"A")
+        yield from store.write("worker/1", b"W1")
+        yield from store.write("worker/2", b"W2")
+        yield from store.write_checkpoint()
+        # post-checkpoint delta: one update, one new key, one tombstone
+        yield from store.write("worker/1", b"W1b")
+        yield from store.write("function/b", b"B")
+        yield from store.write("worker/2", None)
+        got = yield from store.read_checkpoint()
+        snap, delta = got
+        assert snap == {"function/a": b"A", "worker/1": b"W1",
+                        "worker/2": b"W2"}
+        assert delta == {"worker/1": b"W1b", "function/b": b"B",
+                         "worker/2": None}
+    env.process(driver(), name="driver")
+    env.run(until=5.0)
+    assert store.checkpoint_epoch == 1
+    assert store.checkpoint_at is not None
+    # only the latest checkpoint record is retained
+    assert [k for k in store.data if k.startswith("checkpoint/")] == \
+        ["checkpoint/1"]
+
+
+def test_checkpoint_recovery_matches_full_replay():
+    """A leader recovering from checkpoint + delta must end with the same
+    functions, workers and shard table as one replaying the full log."""
+    recovered = []
+    for ckpt in (False, True):
+        env = Environment(seed=9)
+        cl = Cluster(env, n_workers=16, cp_shards=4, enable_ha_sim=True,
+                     cp_checkpoint_enabled=ckpt, cp_checkpoint_period=1.0)
+        cl.start()
+        for i in range(4):
+            cl.register_sync(Function(name=f"f{i}", image_url="i", port=80))
+        env.run(until=3.0)   # >= one checkpoint period when enabled
+        if ckpt:
+            assert cl.store.checkpoint_epoch >= 1
+        # post-checkpoint delta: a new function and a deregistration
+        cl.register_sync(Function(name="f-late", image_url="i", port=80))
+        leader = cl.control_plane_leader()
+        env.process(leader.deregister_function("f0"), name="dereg")
+        env.run(until=4.0)
+        cl.fail_control_plane_leader()
+        env.run(until=8.0)
+        leader = cl.control_plane_leader()
+        assert cl.collector.first_event_at("cp-recovered", after=4.0)
+        recovered.append((sorted(leader.functions),
+                          sorted(leader.workers),
+                          dict(sorted(leader.fn_shard_table.items()))))
+    assert recovered[0] == recovered[1]
+    assert "f-late" in recovered[1][0] and "f0" not in recovered[1][0]
+
+
+def test_checkpoint_loop_runs_off_critical_path():
+    env = Environment(seed=10)
+    cl = Cluster(env, n_workers=8, enable_ha_sim=True,
+                 cp_checkpoint_enabled=True, cp_checkpoint_period=0.5)
+    cl.start()
+    env.run(until=3.0)
+    epochs = cl.collector.event_times("cp-checkpoint")
+    assert len(epochs) >= 3
+    assert cl.store.checkpoint_epoch == len(epochs)
+    # the checkpointer is leader-bound: a deposed leader stops writing them
+    cl.fail_control_plane_leader()
+    env.run(until=6.0)
+    assert cl.collector.event_times("cp-checkpoint", after=3.0)
+
+
+# -- FileStore crash recovery + compaction ------------------------------------
+
+def test_filestore_appends_survive_torn_tail_recovery(tmp_path):
+    """Regression: the replayer used to leave crash garbage in place and
+    reopen in append mode BEHIND it, so every post-recovery write sat after
+    the torn record and was silently lost on the next open. The tail must be
+    truncated to the last valid record before appending."""
+    path = os.fspath(tmp_path / "store.log")
+    st = FileStore(path)
+    st.write("k1", b"v1")
+    st.write("k2", b"v2")
+    st.close()
+    with open(path, "ab") as fh:
+        fh.write(b"\x07\x00garbage")          # torn/corrupt tail
+    st2 = FileStore(path)
+    assert st2.data == {"k1": b"v1", "k2": b"v2"}
+    st2.write("k3", b"v3")                     # append after crash recovery
+    st2.close()
+    st3 = FileStore(path)                      # second recovery must see k3
+    assert st3.data == {"k1": b"v1", "k2": b"v2", "k3": b"v3"}
+    st3.close()
+
+
+def test_filestore_compaction_threshold(tmp_path):
+    path = os.fspath(tmp_path / "store.log")
+    st = FileStore(path, compact_threshold=1024)
+    for i in range(200):
+        st.write("hot", f"v{i}".encode() * 4)
+    assert st.compactions >= 1
+    assert os.path.getsize(path) < 1024
+    st.write("cold", b"c")
+    st.close()
+    st2 = FileStore(path)
+    assert st2.data == {"hot": b"v199" * 4, "cold": b"c"}
+    st2.close()
+
+
+def test_filestore_compact_on_open(tmp_path):
+    path = os.fspath(tmp_path / "store.log")
+    st = FileStore(path)
+    for i in range(50):
+        st.write("k", f"v{i}".encode())
+    st.write("gone", b"x")
+    st.write("gone", None)                     # tombstone
+    st.close()
+    big = os.path.getsize(path)
+    st2 = FileStore(path, compact_on_open=True)
+    assert st2.compactions == 1
+    assert st2.data == {"k": b"v49"}
+    st2.close()
+    assert os.path.getsize(path) < big
+    st3 = FileStore(path)                      # compacted log replays clean
+    assert st3.data == {"k": b"v49"}
+    st3.close()
+
+
+def test_simstore_checkpoint_payload_replays_as_filestore_log(tmp_path):
+    """SimStore checkpoints and the FileStore log share one record framing:
+    a checkpoint payload dropped into a file IS a valid compacted log."""
+    env = Environment(seed=12)
+    store = make_store(env, checkpoint_enabled=True)
+
+    def driver():
+        yield from store.write("worker/1", b"W1")
+        yield from store.write("function/a", b"A")
+        yield from store.write("worker/2", None)   # tombstone never snapshotted
+        yield from store.write_checkpoint()
+    env.process(driver(), name="driver")
+    env.run(until=5.0)
+    payload = store.peek("checkpoint/1")
+    path = os.fspath(tmp_path / "ckpt.log")
+    with open(path, "wb") as fh:
+        fh.write(payload)
+    st = FileStore(path)
+    assert st.data == {"worker/1": b"W1", "function/a": b"A"}
+    assert st.data == decode_records(encode_records(st.data))
+    st.close()
