@@ -810,7 +810,9 @@ def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
     matmul standing in for snapshot-restore/model-load work), so wall-clock
     creation throughput includes genuine payload construction next to the
     DES numbers (ROADMAP "live-mode churn bench"). Teardown of a live
-    sandbox drops its replica, so churn exercises build *and* reclaim."""
+    sandbox reclaims its replica through the worker's ``teardown_hook``
+    (symmetric with ``create_hook``), so churn exercises build *and*
+    reclaim — the cell asserts zero leaked replicas."""
     env = Environment(seed=seed)
     replicas: dict = {}
     hook_wall = [0.0]
@@ -823,18 +825,25 @@ def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
         replicas[sandbox.sandbox_id] = w
         hook_wall[0] += time.perf_counter() - t0
 
+    def teardown_replica(sandbox_id, drain=True):
+        # the kill path owns the reclaim (no post-run sweep): kill_sandbox /
+        # fail_node call this for every sandbox they dismantle
+        replicas.pop(sandbox_id, None)
+
     cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
-                       create_hook=create_replica)
+                       create_hook=create_replica,
+                       teardown_hook=teardown_replica)
     plan = [(i / rate, f"lf{i % n_functions}", 0.02)
             for i in range(int(rate * duration))]
     preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
     ev0, t0 = env.events_processed, time.perf_counter()
     invs = run_open_loop(env, cl, plan, until_extra=10.0)
     wall = time.perf_counter() - t0
-    # reclaim: replicas of sandboxes the autoscaler tore down are dropped
+    # every replica still held must belong to a live sandbox: the teardown
+    # hook reclaimed the rest as the autoscaler scaled down
     live_ids = {sid for w in cl.workers.values() for sid in w.sandboxes}
-    for sid in [s for s in replicas if s not in live_ids]:
-        del replicas[sid]
+    leaked = [s for s in replicas if s not in live_ids]
+    assert not leaked, f"teardown_hook leaked {len(leaked)} replicas"
     stats = latency_stats(invs, "e2e_latency")
     creations = cl.collector.sandbox_creations
     return {
@@ -847,6 +856,7 @@ def live_smoke_point(n_workers: int = 8, n_functions: int = 16,
         "create_hook_wall_s": round(hook_wall[0], 4),
         "create_hook_ms_mean": round(1e3 * hook_wall[0] / max(creations, 1), 3),
         "live_replicas": len(replicas),
+        "leaked_replicas": len(leaked),
         "done": stats["done"], "total": stats["total"],
         "p50_ms": round(stats["p50"] * 1e3, 3),
         "p99_ms": round(stats["p99"] * 1e3, 3),
@@ -862,10 +872,25 @@ def _print_live_smoke(cell: dict) -> None:
 
 
 def run_live_smoke(out: str = "BENCH_churn.json") -> dict:
-    """``--live-smoke``: run only the live-mode cell and merge it into the
-    existing out-file (preserving the recorded sweeps)."""
+    """``--live-smoke``: run the live-mode churn cell plus one real-invoke
+    live cell (tiny truncated smollm; payload executed end-to-end through
+    CP -> DP -> worker -> batcher) and merge both into the out-file. This
+    is the CI leg: seconds-scale, wall-clock numbers recorded but never
+    asserted on (timing is machine-dependent); the *functional* bits —
+    zero leaked replicas, every completed invoke carrying real tokens —
+    are asserted."""
     cell = live_smoke_point()
     _print_live_smoke(cell)
+    real = live_grid_point(4, 20.0, 1.0, n_functions=2)
+    real.pop("_start_log")
+    real.pop("_invoke_walls")
+    assert real["done"] > 0 and real["tokens"] > 0, \
+        "live smoke executed no real payloads"
+    cell["real_invoke"] = real
+    print(f"live real-invoke: done={real['done']}/{real['total']} "
+          f"tokens={real['tokens']} "
+          f"(cold {real['cold_create_ms_median']}ms / warm "
+          f"{real['warm_create_ms_median']}ms)", flush=True)
     try:
         with open(out) as fh:
             result = json.load(fh)
@@ -879,6 +904,261 @@ def run_live_smoke(out: str = "BENCH_churn.json") -> dict:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
     return cell
+
+
+# -- live execution mode (real JAX payloads; ISSUE 10) ------------------------
+
+def _live_spec(mode: str = "process", max_slots: int = 4,
+               max_seq: int = 64, max_new: int = 8):
+    """Tiny truncated smollm config every live cell shares (CPU-feasible:
+    ~1-2 s cold compile, ~5 ms warm replica build)."""
+    from repro.configs import get_config
+    from repro.live import LiveFunctionSpec
+
+    cfg = get_config("smollm-360m").reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=128)
+    return LiveFunctionSpec(cfg=cfg, mode=mode, max_seq=max_seq,
+                            max_slots=max_slots, default_max_new=max_new)
+
+
+def live_cold_warm_point(mode: str = "process", n_warm: int = 4) -> dict:
+    """Cold vs warm live sandbox creation — the shared-executable-cache
+    headline (acceptance: warm >= 10x faster than cold).
+
+    Process mode: a fresh ``ExecutableCache``; the first creation compiles
+    (cold), the rest hit the cache (warm). Container mode: a fresh
+    persistent-compile-cache dir; the first spawned worker compiles and
+    populates it, the next deserializes instead (n_warm is clamped to 1 —
+    workers cost seconds each)."""
+    import shutil
+    import tempfile
+
+    from repro.core.abstractions import Sandbox
+    from repro.live import LiveBackend
+    from repro.serving.exec_cache import ExecutableCache
+
+    cache_dir = tempfile.mkdtemp(prefix="live-xla-cache-") \
+        if mode == "container" else None
+    if mode == "container":
+        n_warm = 1
+    lb = LiveBackend(default_spec=_live_spec(mode),
+                     exec_cache=ExecutableCache(),
+                     compile_cache_dir=cache_dir)
+    try:
+        for i in range(1 + n_warm):
+            sb = Sandbox(sandbox_id=i + 1, function_name="lf",
+                         ip=(10, 0, 0, 1), port=80, worker_id=0)
+            lb.create_hook(sb)
+        rows = lb.start_log
+        assert rows[0]["cold"] and not any(r["cold"] for r in rows[1:]), \
+            "cold/warm split did not land where expected"
+        cold = rows[0]["wall_s"]
+        warm = float(np.median([r["wall_s"] for r in rows[1:]]))
+        return {"mode": mode, "cold_create_s": round(cold, 4),
+                "warm_create_s": round(warm, 4),
+                "warm_speedup": round(cold / max(warm, 1e-9), 1),
+                "n_warm": n_warm,
+                "exec_cache": lb.cache_stats()}
+    finally:
+        lb.close()
+        if cache_dir:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+def live_grid_point(n_workers: int, rate: float, duration: float,
+                    mode: str = "process", n_functions: int = 8,
+                    seed: int = 11, max_slots: int = 4) -> dict:
+    """One live workers x rate cell: every invocation carries a real
+    ``LiveRequest`` executed in the dispatched sandbox's batcher."""
+    from repro.core.request import LiveRequest
+    from repro.live import LiveBackend
+    from repro.serving.exec_cache import ExecutableCache
+
+    env = Environment(seed=seed)
+    lb = LiveBackend(default_spec=_live_spec(mode, max_slots=max_slots),
+                     exec_cache=ExecutableCache())
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
+                       live_backend=lb, sandbox_concurrency=max_slots)
+    plan = [(i / rate, f"lf{i % n_functions}", 0.02)
+            for i in range(int(rate * duration))]
+    preload_functions(cl, [p[1] for p in plan], SWEEP_SCALING)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(1, 127, size=(len(plan), 4))
+
+    def req_factory(i):
+        return LiveRequest(prompt=[int(t) for t in prompts[i]],
+                           max_new_tokens=8)
+
+    ev0, t0 = env.events_processed, time.perf_counter()
+    invs = run_open_loop(env, cl, plan, until_extra=10.0,
+                         request_factory=req_factory)
+    wall = time.perf_counter() - t0
+    try:
+        done = [i for i in invs if i.t_done > 0 and not i.failed]
+        executed = [i for i in done if i.request.tokens is not None]
+        assert len(executed) == len(done), \
+            "completed invocation without real payload execution"
+        stats = latency_stats(invs, "e2e_latency")
+        inv_walls = sorted(i.request.wall_s for i in executed) or [0.0]
+        creations = cl.collector.sandbox_creations
+        cold = [r for r in lb.start_log if r["cold"]]
+        warm = [r for r in lb.start_log if not r["cold"]]
+        return {
+            "workers": n_workers, "rate": rate, "duration": duration,
+            "mode": mode, "n_functions": n_functions,
+            "max_slots": max_slots,
+            "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
+            "events": env.events_processed - ev0,
+            "creations": creations,
+            "creations_per_wall_s": round(creations / wall, 1),
+            "cold_creates": len(cold), "warm_creates": len(warm),
+            "cold_create_ms_median": round(
+                1e3 * float(np.median([r["wall_s"] for r in cold])), 2)
+            if cold else None,
+            "warm_create_ms_median": round(
+                1e3 * float(np.median([r["wall_s"] for r in warm])), 2)
+            if warm else None,
+            "done": stats["done"], "total": stats["total"],
+            "p50_ms": round(stats["p50"] * 1e3, 3),
+            "p99_ms": round(stats["p99"] * 1e3, 3),
+            "invoke_wall_p50_ms": round(
+                1e3 * inv_walls[len(inv_walls) // 2], 3),
+            "invoke_wall_p99_ms": round(
+                1e3 * inv_walls[int(len(inv_walls) * 0.99) - 1], 3),
+            "tokens": lb.tokens_total,
+            "tokens_per_wall_s": round(lb.tokens_total / wall, 1),
+            "batched_invokes": lb.batched_invokes,
+            "exec_cache": lb.cache_stats(),
+            "_start_log": lb.start_log,
+            "_invoke_walls": inv_walls,
+        }
+    finally:
+        lb.close()
+
+
+def live_azure_slice(n_functions: int = 10, duration: float = 6.0,
+                     target_invocations: int = 150, n_workers: int = 16,
+                     seed: int = 42) -> dict:
+    """Azure-trace slice replayed end-to-end in live mode: the Shahrad-style
+    workload shape (Zipf popularity, lognormal exec times, timer + Poisson
+    arrivals) with a real ``LiveRequest`` on every invocation."""
+    from benchmarks.azure_trace import generate_azure_like_trace
+    from repro.core.request import LiveRequest
+    from repro.live import LiveBackend
+    from repro.serving.exec_cache import ExecutableCache
+
+    trace = generate_azure_like_trace(
+        n_functions=n_functions, duration=duration,
+        target_invocations=target_invocations, seed=seed,
+        timer_fraction=0.2, n_timer_groups=2)
+    env = Environment(seed=seed)
+    lb = LiveBackend(default_spec=_live_spec("process"),
+                     exec_cache=ExecutableCache())
+    cl = make_dirigent(env, n_workers=n_workers, runtime="firecracker",
+                       live_backend=lb, sandbox_concurrency=4)
+    preload_functions(cl, [f.name for f in trace.functions], SWEEP_SCALING)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(1, 127, size=(len(trace.invocations), 4))
+
+    def req_factory(i):
+        return LiveRequest(prompt=[int(t) for t in prompts[i]],
+                           max_new_tokens=8)
+
+    t0 = time.perf_counter()
+    invs = run_open_loop(env, cl, trace.invocations, until_extra=15.0,
+                         request_factory=req_factory)
+    wall = time.perf_counter() - t0
+    try:
+        done = [i for i in invs if i.t_done > 0 and not i.failed]
+        executed = [i for i in done if i.request.tokens is not None]
+        assert len(executed) == len(done), \
+            "azure slice: completed invocation without payload execution"
+        stats = latency_stats(invs, "e2e_latency")
+        return {
+            "n_functions": n_functions, "trace_duration": duration,
+            "invocations": len(trace.invocations),
+            "workers": n_workers,
+            "wall_s": round(wall, 3), "sim_s": round(env.now, 3),
+            "creations": cl.collector.sandbox_creations,
+            "done": stats["done"], "total": stats["total"],
+            "real_payloads_executed": len(executed),
+            "p50_ms": round(stats["p50"] * 1e3, 3),
+            "p99_ms": round(stats["p99"] * 1e3, 3),
+            "tokens": lb.tokens_total,
+            "batched_invokes": lb.batched_invokes,
+            "exec_cache": lb.cache_stats(),
+        }
+    finally:
+        lb.close()
+
+
+def live_grid_section(smoke: bool = False) -> dict:
+    """The live execution sweep — cold/warm creation for both modes, a
+    workers x rate grid with real payloads on every invoke, and an
+    Azure-trace slice. Per-phase wall measurements are folded into a
+    calibrated ``DirigentCosts`` candidate (``costs_candidate``) for DES
+    cross-checking."""
+    from repro.core.costmodel import live_calibrated_candidate
+
+    section: dict = {"provenance": bench_provenance()}
+    section["cold_warm"] = [live_cold_warm_point("process")]
+    if not smoke:
+        section["cold_warm"].append(live_cold_warm_point("container"))
+    for row in section["cold_warm"]:
+        print(f"live cold/warm mode={row['mode']}: "
+              f"cold={row['cold_create_s'] * 1e3:.0f}ms "
+              f"warm={row['warm_create_s'] * 1e3:.1f}ms "
+              f"-> {row['warm_speedup']:.0f}x", flush=True)
+
+    grid = ([(8, 50.0, 2.0)] if smoke
+            else [(8, 50.0, 2.0), (16, 100.0, 2.0), (32, 200.0, 2.0)])
+    cells, start_log, invoke_walls = [], [], []
+    for w, r, d in grid:
+        cell = live_grid_point(w, r, d)
+        start_log += cell.pop("_start_log")
+        invoke_walls += cell.pop("_invoke_walls")
+        cells.append(cell)
+        print(f"live workers={w} rate={r:.0f}: "
+              f"{cell['creations_per_wall_s']:.0f} creations/s wall "
+              f"(cold {cell['cold_create_ms_median']}ms / warm "
+              f"{cell['warm_create_ms_median']}ms), "
+              f"invoke p50={cell['invoke_wall_p50_ms']}ms "
+              f"p99={cell['invoke_wall_p99_ms']}ms, "
+              f"{cell['tokens_per_wall_s']:.0f} tok/s, "
+              f"batched={cell['batched_invokes']}, "
+              f"done={cell['done']}/{cell['total']}", flush=True)
+    section["grid"] = cells
+    section["azure_slice"] = live_azure_slice()
+    az = section["azure_slice"]
+    print(f"live azure slice: {az['real_payloads_executed']}/{az['total']} "
+          f"real invokes, {az['creations']} creations, "
+          f"p99={az['p99_ms']:.1f}ms, {az['tokens']} tokens", flush=True)
+    # container cold/warm rows feed the candidate too
+    for row in section["cold_warm"]:
+        start_log.append({"mode": row["mode"], "cold": True,
+                          "wall_s": row["cold_create_s"]})
+        start_log.append({"mode": row["mode"], "cold": False,
+                          "wall_s": row["warm_create_s"]})
+    section["costs_candidate"] = live_calibrated_candidate(
+        start_log, invoke_walls)
+    return section
+
+
+def run_live_grid(out: str = "BENCH_churn.json",
+                  smoke: bool = False) -> dict:
+    """``--live-grid``: run the live execution sweep alone and merge it
+    into the out-file."""
+    section = live_grid_section(smoke=smoke)
+    try:
+        with open(out) as fh:
+            result = json.load(fh)
+    except (OSError, ValueError):
+        result = {"meta": {"bench": "churn_scale"}}
+    result["live_grid"] = section
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"wrote {out}", flush=True)
+    return section
 
 
 def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
@@ -1055,6 +1335,10 @@ def run_bench(smoke: bool = False, out: str = "BENCH_churn.json") -> dict:
     result["live_smoke"] = cell = live_smoke_point()
     _print_live_smoke(cell)
 
+    # -- live execution sweep (real JAX payloads on the invoke path) --------
+    if not smoke:
+        result["live_grid"] = live_grid_section(smoke=False)
+
     with open(out, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"wrote {out}", flush=True)
@@ -1130,6 +1414,11 @@ if __name__ == "__main__":
     ap.add_argument("--live-smoke", action="store_true",
                     help="run only the live-mode (create_hook) churn cell "
                          "and merge it into --out")
+    ap.add_argument("--live-grid", action="store_true",
+                    help="run only the live execution sweep (real JAX "
+                         "payloads: cold/warm creation, workers x rate, "
+                         "Azure slice) and merge it into --out (honors "
+                         "--smoke)")
     ap.add_argument("--multi-dp", action="store_true",
                     help="run only the multi-data-plane sweep and merge it "
                          "into --out (honors --smoke)")
@@ -1153,6 +1442,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.live_smoke:
         run_live_smoke(out=args.out)
+    elif args.live_grid:
+        run_live_grid(out=args.out, smoke=args.smoke)
     elif args.multi_dp:
         run_multi_dp(out=args.out, smoke=args.smoke)
     elif args.failover:

@@ -78,23 +78,31 @@ def preload_functions(system, names: List[str],
 
 
 def run_open_loop(env: Environment, system, plan: List[tuple],
-                  until_extra: float = 120.0) -> List:
+                  until_extra: float = 120.0,
+                  request_factory: Optional[Callable] = None) -> List:
     """Submit (t, fn, exec_time) invocations open-loop; returns Invocations.
 
     Plan times are offsets from *traffic start* (``env.now`` at call time),
     and so is the run horizon: boot work already on the clock — at 20k
     workers the O(n_workers)-fsyncs registration alone is ~30 s of sim time
     — must not eat the measurement window, or large-worker cells silently
-    truncate mid-submission."""
+    truncate mid-submission.
+
+    ``request_factory(i)`` (live mode) builds the ``LiveRequest`` riding
+    invocation ``i``; every dispatch then executes real payload work."""
     invs = []
 
     def driver(env):
         t_prev = 0.0
-        for t, fn, et in plan:
+        for i, (t, fn, et) in enumerate(plan):
             if t > t_prev:
                 yield env.timeout(t - t_prev)
                 t_prev = t
-            invs.append(system.invoke(fn, exec_time=et))
+            if request_factory is not None:
+                invs.append(system.invoke(fn, exec_time=et,
+                                          request=request_factory(i)))
+            else:
+                invs.append(system.invoke(fn, exec_time=et))
 
     env.process(driver(env), name="bench-driver")
     horizon = env.now + (plan[-1][0] if plan else 0.0) + until_extra

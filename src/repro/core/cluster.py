@@ -139,8 +139,17 @@ class Cluster:
                  persist_read_per_record: Optional[float] = None,
                  cp_checkpoint_enabled: bool = False,
                  cp_checkpoint_period: Optional[float] = None,
-                 create_hook: Optional[Callable] = None):
+                 create_hook: Optional[Callable] = None,
+                 teardown_hook: Optional[Callable] = None,
+                 live_backend: Optional[object] = None):
         self.env = env
+        # live execution mode (repro.live.LiveBackend): the backend supplies
+        # the worker hooks and the invoke-path admit/collect unless explicit
+        # hooks override it; None (default) keeps the DES path bit-identical
+        self.live_backend = live_backend
+        if live_backend is not None:
+            create_hook = create_hook or live_backend.create_hook
+            teardown_hook = teardown_hook or live_backend.teardown_hook
         self.costs = (costs or DEFAULT_COSTS).dirigent
         self.collector = Collector()
         self._persist_group_commit = (
@@ -207,7 +216,9 @@ class Cluster:
                 port=9000)
             self.workers[wid] = WorkerDaemon(env, info, self.costs,
                                              runtime=runtime,
-                                             create_hook=create_hook)
+                                             create_hook=create_hook,
+                                             teardown_hook=teardown_hook,
+                                             live_backend=live_backend)
         self.elector = LeaderElector(env, self, self.costs,
                                      enable_hb_sim=enable_ha_sim)
         self.enable_ha_sim = enable_ha_sim
@@ -399,12 +410,15 @@ class Cluster:
 
     def invoke(self, function_name: str, exec_time: float,
                mode: InvocationMode = InvocationMode.SYNC,
-               payload: Optional[Callable] = None) -> Invocation:
-        """Submit an invocation at env.now; returns the Invocation record."""
+               payload: Optional[Callable] = None,
+               request: Optional[object] = None) -> Invocation:
+        """Submit an invocation at env.now; returns the Invocation record.
+        ``request`` (a ``LiveRequest``) rides the invocation to whatever
+        sandbox the DP picks and is executed there by the live backend."""
         inv = Invocation(inv_id=next(self._inv_ids),
                          function_name=function_name,
                          arrival=self.env.now, exec_time=exec_time,
-                         mode=mode, payload=payload)
+                         mode=mode, payload=payload, request=request)
         self.env.process(self._front_end(inv), name=f"inv-{inv.inv_id}")
         return inv
 

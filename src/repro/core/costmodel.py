@@ -8,7 +8,7 @@ resources.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 
 @dataclass
@@ -355,3 +355,41 @@ class CostModel:
 
 
 DEFAULT_COSTS = CostModel()
+
+
+def live_calibrated_candidate(start_log, invoke_walls) -> dict:
+    """Turn live-mode measurements into a calibrated ``DirigentCosts``
+    candidate: a {field: seconds} dict (only fields the live run actually
+    observed) that the bench records next to the modeled defaults so the
+    DES and live modes can be cross-checked.
+
+    Mapping (live phase -> modeled constant):
+
+      * warm process-mode creation -> ``firecracker_create_median`` — a
+        replica built against a hot executable cache is the snapshot-restore
+        analogue: pre-built state, per-instance construction only;
+      * cold container-mode creation -> ``containerd_create_median`` — a
+        spawned worker paying import + compile is the full container boot;
+      * median invoke payload wall -> the workload's real ``exec_time``.
+
+    ``start_log`` is ``LiveBackend.start_log``; ``invoke_walls`` a list of
+    per-invoke payload wall seconds."""
+    import statistics
+
+    def _med(rows):
+        return round(statistics.median(rows), 6) if rows else None
+
+    out = {}
+    warm_proc = [r["wall_s"] for r in start_log
+                 if r["mode"] == "process" and not r["cold"]]
+    cold_cont = [r["wall_s"] for r in start_log
+                 if r["mode"] == "container" and r["cold"]]
+    if warm_proc:
+        out["firecracker_create_median"] = _med(warm_proc)
+    if cold_cont:
+        out["containerd_create_median"] = _med(cold_cont)
+    if invoke_walls:
+        out["exec_time_median"] = _med(list(invoke_walls))
+    known = {f.name for f in fields(DirigentCosts)}
+    out["fields_in_model"] = sorted(k for k in out if k in known)
+    return out

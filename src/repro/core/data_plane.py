@@ -273,7 +273,8 @@ class DataPlane:
             inv.t_exec_start = self.env.now
             primary = self.env.process(
                 worker.execute(ep.sandbox.sandbox_id, inv.exec_time,
-                               inv.payload), name=f"exec-{inv.inv_id}")
+                               inv.payload, request=inv.request),
+                name=f"exec-{inv.inv_id}")
             try:
                 if self.hedge_after is None:
                     inv.result = yield primary
@@ -303,7 +304,8 @@ class DataPlane:
                                 hedge_ep.sandbox.worker_id)
                             backup = self.env.process(
                                 w2.execute(hedge_ep.sandbox.sandbox_id,
-                                           inv.exec_time, inv.payload),
+                                           inv.exec_time, inv.payload,
+                                           request=inv.request),
                                 name=f"hedge-{inv.inv_id}")
                             idx2, val2 = yield self.env.any_of(
                                 [primary, backup])

@@ -137,6 +137,25 @@ def render_metrics(cluster: "Cluster") -> str:
     alive = sum(1 for w in cluster.workers.values() if w.daemon_alive)
     lines.append(f"dirigent_workers_alive {alive}")
     lines.append(f"dirigent_workers_total {len(cluster.workers)}")
+    lb = getattr(cluster, "live_backend", None)
+    if lb is not None:
+        # live execution mode: real replica population, the shared
+        # executable cache's effectiveness (hits = creations that skipped
+        # XLA compilation), and wall time spent in real payload execution
+        lines.append("# TYPE dirigent_live_replicas gauge")
+        lines.append(f"dirigent_live_replicas {lb.replicas_live}")
+        lines.append("# TYPE dirigent_live_exec_cache_hits counter")
+        lines.append(f"dirigent_live_exec_cache_hits {lb.exec_cache.hits}")
+        lines.append("# TYPE dirigent_live_exec_cache_misses counter")
+        lines.append(f"dirigent_live_exec_cache_misses "
+                     f"{lb.exec_cache.misses}")
+        lines.append("# TYPE dirigent_live_invoke_seconds counter")
+        lines.append(f"dirigent_live_invoke_seconds "
+                     f"{lb.invoke_seconds_total:.6f}")
+        lines.append("# TYPE dirigent_live_invocations_total counter")
+        lines.append(f"dirigent_live_invocations_total {lb.invokes}")
+        lines.append("# TYPE dirigent_live_tokens_total counter")
+        lines.append(f"dirigent_live_tokens_total {lb.tokens_total}")
     return "\n".join(lines) + "\n"
 
 

@@ -12,6 +12,27 @@ class InvocationMode(enum.Enum):
 
 
 @dataclass
+class LiveRequest:
+    """A real inference request riding an invocation in live mode.
+
+    Plain data (prompt in, tokens out) so the core never imports the live
+    backend: the DP threads it to ``WorkerDaemon.execute``, which hands it
+    to the worker's ``live_backend`` for slot admission + shared decode
+    (repro/live/backend.py). ``wall_s`` is the payload wall time billed to
+    the sim clock; ``batched_with`` counts how many other requests shared
+    at least one decode step in the same replica's batcher slots."""
+
+    prompt: list = field(default_factory=list)     # token ids
+    max_new_tokens: int = 16
+    # -- filled by the live backend -----------------------------------------
+    tokens: Optional[list] = None                  # generated ids
+    wall_s: float = 0.0
+    batched_with: int = 0
+    failed: bool = False
+    failure_reason: str = ""
+
+
+@dataclass
 class Invocation:
     inv_id: int
     function_name: str
@@ -20,6 +41,10 @@ class Invocation:
     mode: InvocationMode = InvocationMode.SYNC
     # live-mode payload: a real callable executed on the worker (examples/)
     payload: Optional[Callable[[], object]] = None
+    # live-mode request: real inference dispatched into the target sandbox's
+    # replica/batcher by the worker's live backend (preferred over payload —
+    # a payload can't know which sandbox the DP picked; a request rides it)
+    request: Optional[LiveRequest] = None
 
     # -- timestamps (filled as the request traverses the system) -----------
     t_dp_arrival: float = -1.0

@@ -71,7 +71,9 @@ class SandboxRuntime:
 class WorkerDaemon:
     def __init__(self, env: Environment, info: WorkerNodeInfo,
                  costs: DirigentCosts, runtime: str = "firecracker",
-                 create_hook: Optional[Callable] = None):
+                 create_hook: Optional[Callable] = None,
+                 teardown_hook: Optional[Callable] = None,
+                 live_backend: Optional[object] = None):
         self.env = env
         self.info = info
         self.costs = costs
@@ -80,6 +82,13 @@ class WorkerDaemon:
         self.daemon_alive = True
         self.node_alive = True
         self.create_hook = create_hook  # live-mode: build the real replica
+        # symmetric reclaim: called as teardown_hook(sandbox_id, drain) —
+        # drain=True from graceful kill_sandbox (in-slot live requests
+        # finish, the wall-side mirror of the CP's teardown_drain_grace),
+        # drain=False from fail_node (in-slot requests fail)
+        self.teardown_hook = teardown_hook
+        # live-mode invoke path: admit/collect LiveRequests (repro.live)
+        self.live_backend = live_backend
         self._kernel_lock = env.resource(
             capacity=1, name=f"kernel-lock-w{info.worker_id}")
         self._netcfg_pool = env.store(name=f"netcfg-w{info.worker_id}")
@@ -187,6 +196,11 @@ class WorkerDaemon:
         rt = self.sandboxes.pop(sandbox_id, None)
         if rt is None:
             return
+        if self.teardown_hook is not None:
+            # reclaim the live replica with drain semantics: the CP already
+            # waited teardown_drain_grace, so remaining in-slot requests are
+            # stragglers — finish them rather than fail them
+            self.teardown_hook(sandbox_id, True)
         yield self.env.timeout(self.costs.sandbox_teardown)
         # recycle the network config back into the pool after a delay — a
         # plain scheduled callback (one heap event), not a process
@@ -202,16 +216,35 @@ class WorkerDaemon:
 
     # -- request execution -----------------------------------------------------
     def execute(self, sandbox_id: int, exec_time: float,
-                payload: Optional[Callable] = None) -> Generator:
-        """Execute one invocation inside a sandbox."""
+                payload: Optional[Callable] = None,
+                request: Optional[object] = None) -> Generator:
+        """Execute one invocation inside a sandbox. ``request`` is a live
+        ``LiveRequest`` routed into this sandbox's replica via the worker's
+        ``live_backend`` (admit into a batcher slot, collect tokens)."""
         rt = self.sandboxes.get(sandbox_id)
         if rt is None or not rt.ready or not self.node_alive:
             raise RuntimeError("sandbox gone")
         c = self.costs
         rt.executing += 1
         try:
+            ticket = None
+            if request is not None and self.live_backend is not None:
+                # admit BEFORE yielding the dispatch overhead: requests that
+                # are concurrent in sim time land in the replica's batcher
+                # slots together and share decode steps (the first collect
+                # pumps for everyone admitted by then)
+                ticket = self.live_backend.admit(sandbox_id, request)
             yield self.env.timeout(c.worker_nat_hop + c.exec_slot_overhead)
-            if payload is not None:
+            if ticket is not None:
+                # live mode: real inference; bill its wall time to the clock
+                import time
+                t0 = time.perf_counter()  # simlint: ok(wall-clock): live mode bills real work
+                result = self.live_backend.collect(ticket)
+                yield self.env.timeout(time.perf_counter() - t0)  # simlint: ok(wall-clock): live mode bills real work
+                if result.failed:
+                    raise RuntimeError(result.failure_reason
+                                       or "live request failed")
+            elif payload is not None:
                 # live mode: run real work; bill its wall time to the clock
                 import time
                 t0 = time.perf_counter()  # simlint: ok(wall-clock): live mode bills real work
@@ -238,4 +271,8 @@ class WorkerDaemon:
         self.node_alive = False
         for rt in self.sandboxes.values():
             rt.ready = False
+        if self.teardown_hook is not None:
+            for sid in list(self.sandboxes):
+                # node death: no drain — in-slot live requests fail
+                self.teardown_hook(sid, False)
         self.sandboxes.clear()

@@ -1,0 +1,10 @@
+"""Live execution mode: real JAX payloads behind the Dirigent orchestrator.
+
+The DES stays the source of truth for orchestration latency; this package
+supplies the *payload* side — per-sandbox replicas (in-process or
+subprocess) executing real inference on the DP invoke path. See
+docs/architecture.md "Live execution mode".
+"""
+from repro.live.backend import LiveBackend, LiveFunctionSpec, LiveTicket
+
+__all__ = ["LiveBackend", "LiveFunctionSpec", "LiveTicket"]

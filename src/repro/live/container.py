@@ -1,0 +1,146 @@
+"""Container-mode live sandbox: an isolated subprocess replica worker.
+
+The containerd analogue of the live backend's process mode: the sandbox is
+a real OS process with its own JAX runtime, started with the ``spawn``
+method (fork deadlocks under JAX's thread pools) and driven over a pipe
+with a tiny admit/collect protocol mirroring ``_ProcessSandbox``.
+
+An in-process ``ExecutableCache`` cannot help across process boundaries,
+so the shared-executable story here is the JAX *persistent compilation
+cache*: the parent passes ``cache_dir`` and every child points
+``jax_compilation_cache_dir`` at it. The first worker of a config pays the
+XLA compile and populates the directory; later workers (the "warm
+container" path) deserialize the executable instead of recompiling — the
+same cold/warm split the in-process cache gives, at container granularity.
+
+Protocol (parent -> child):
+    ("admit", prompt, max_new)   -> ("rid", rid, peers)
+    ("collect", rid)             -> ("done", tokens_or_None, peers)
+    ("shutdown", drain)          -> ("bye", finished_dict)
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+from typing import Dict, List, Optional, Tuple
+
+# ready-ack budget: tiny-config CPU compile is ~2-4 s; a hung child should
+# fail the creation, not the whole bench
+_READY_TIMEOUT_S = 120.0
+
+
+def _child_main(conn, spec, cache_dir: Optional[str], seed: int) -> None:
+    """Subprocess entry point (module-level: spawn must import it)."""
+    import jax
+
+    if cache_dir:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update(
+            "jax_persistent_cache_min_entry_size_bytes", -1)
+    from repro.serving.engine import ContinuousBatcher, Replica
+    from repro.serving.exec_cache import ExecutableCache
+
+    # fresh per-process cache: isolation is the point of container mode
+    replica = Replica(spec.cfg, rng_seed=seed, max_seq=spec.max_seq,
+                      run_cfg=spec.run_cfg,
+                      exec_cache=ExecutableCache())
+    batcher = ContinuousBatcher(replica, max_slots=spec.max_slots)
+    # warm the batcher's decode signature before acking ready, so creation
+    # wall time includes the compile (cold) or persistent-cache load (warm)
+    warm_rid = batcher.add_request([1], 1)
+    batcher.run_until_done()
+    batcher.finished.pop(warm_rid, None)
+    conn.send(("ready",))
+    while True:
+        msg = conn.recv()
+        if msg[0] == "admit":
+            _, prompt, max_new = msg
+            peers = sum(1 for s in batcher.slots if s.active)
+            rid = batcher.add_request(list(prompt), max_new)
+            conn.send(("rid", rid, peers))
+        elif msg[0] == "collect":
+            rid = msg[1]
+            peers = 0
+            while rid not in batcher.finished:
+                active = sum(1 for s in batcher.slots if s.active)
+                if active == 0:
+                    break
+                peers = max(peers, active)
+                batcher.step()
+            conn.send(("done", batcher.finished.get(rid), peers))
+        elif msg[0] == "shutdown":
+            if msg[1]:
+                batcher.run_until_done()
+            else:
+                batcher.abort()
+            conn.send(("bye", dict(batcher.finished)))
+            break
+    conn.close()
+
+
+class ContainerSandbox:
+    """Parent-side handle; API mirrors ``_ProcessSandbox``."""
+
+    def __init__(self, spec, cache_dir: Optional[str] = None, seed: int = 0):
+        import os
+
+        self.spec = spec
+        # cold = nothing persisted yet for any config (first worker pays
+        # the compile and populates the directory)
+        self.cold = (not cache_dir) or not os.path.isdir(cache_dir) \
+            or not os.listdir(cache_dir)
+        ctx = mp.get_context("spawn")
+        self._conn, child_conn = ctx.Pipe()
+        self.proc = ctx.Process(target=_child_main,
+                                args=(child_conn, spec, cache_dir, seed),
+                                daemon=True)
+        t0 = time.perf_counter()
+        self.proc.start()
+        child_conn.close()
+        if not self._conn.poll(_READY_TIMEOUT_S):
+            self.proc.kill()
+            raise RuntimeError("container worker never became ready")
+        assert self._conn.recv()[0] == "ready"
+        self.start_wall_s = time.perf_counter() - t0
+        self._finished: Dict[int, List[int]] = {}
+
+    def admit(self, req) -> Tuple[int, int]:
+        self._conn.send(("admit", list(req.prompt),
+                         req.max_new_tokens or self.spec.default_max_new))
+        _, rid, peers = self._conn.recv()
+        return rid, peers
+
+    def pump(self, rid: int) -> Tuple[Optional[List[int]], int]:
+        if rid in self._finished:
+            return self._finished.pop(rid), 0
+        self._conn.send(("collect", rid))
+        _, toks, peers = self._conn.recv()
+        return toks, peers
+
+    def drain(self) -> Dict[int, List[int]]:
+        return self._shutdown(drain=True)
+
+    def abort(self) -> List[int]:
+        self._shutdown(drain=False)
+        return []
+
+    def _shutdown(self, drain: bool) -> Dict[int, List[int]]:
+        finished: Dict[int, List[int]] = {}
+        try:
+            self._conn.send(("shutdown", drain))
+            if self._conn.poll(_READY_TIMEOUT_S):
+                msg = self._conn.recv()
+                if msg[0] == "bye":
+                    finished = msg[1]
+        except (BrokenPipeError, EOFError, OSError):
+            pass
+        self.proc.join(timeout=10.0)
+        if self.proc.is_alive():
+            self.proc.kill()
+        return finished
+
+    def close(self) -> None:
+        if self.proc.is_alive():
+            self._shutdown(drain=False)
+        self._conn.close()

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.models.api import RunConfig, build_model
+from repro.models.api import RunConfig
+from repro.serving.exec_cache import ExecutableCache, default_cache
 
 
 def sample_token(logits: jax.Array, rng: Optional[jax.Array] = None,
@@ -42,16 +43,24 @@ def sample_token(logits: jax.Array, rng: Optional[jax.Array] = None,
 
 class Replica:
     def __init__(self, cfg: ArchConfig, params=None, rng_seed: int = 0,
-                 max_seq: int = 256, run_cfg: Optional[RunConfig] = None):
+                 max_seq: int = 256, run_cfg: Optional[RunConfig] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
         self.cfg = cfg
         self.run_cfg = run_cfg or RunConfig(q_chunk=64, kv_chunk=64,
                                             seq_chunk=16)
-        self.model = build_model(cfg, self.run_cfg)
+        # prefill and decode executables come from the shared process-global
+        # cache: the second replica of a (cfg, run_cfg) pays model-state
+        # construction but zero XLA recompilation (serving/exec_cache.py)
+        self.exec_cache = exec_cache if exec_cache is not None \
+            else default_cache()
+        entry = self.exec_cache.get(cfg, self.run_cfg)
+        self.model = entry.model
         self.max_seq = max_seq
         if params is None:
             params = self.model.init_params(jax.random.PRNGKey(rng_seed))
         self.params = params
-        self._decode = jax.jit(self.model.decode_step)
+        self._decode = entry.decode
+        self._prefill = entry.prefill
         self.stats = {"requests": 0, "tokens": 0, "decode_steps": 0}
 
     def new_cache(self, batch: int):
@@ -160,6 +169,20 @@ class ContinuousBatcher:
                 done.append(s.request_id)
                 s.active = False
         return done
+
+    def abort(self) -> List[int]:
+        """Kill every in-slot request without finishing it (node-failure
+        semantics; graceful teardown drains via ``run_until_done`` instead,
+        mirroring the DES ``teardown_drain_grace``). Aborted requests never
+        appear in ``finished``; returns their request ids."""
+        killed: List[int] = []
+        for s in self.slots:
+            if s.active:
+                killed.append(s.request_id)
+                s.active = False
+                s.pending = []
+                s.generated = []
+        return killed
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         for _ in range(max_steps):
